@@ -1,0 +1,146 @@
+"""Shared benchmark harness: a cached trained model + weight corpora + CSV.
+
+The perplexity benchmarks (Table 1, Figs 9-12) evaluate a ~9M-param LM
+trained in-repo on the synthetic corpus (container is offline; see
+DESIGN.md §6). The quantization-error benchmarks (Figs 3, 8) additionally
+use LLM-statistics-matched weight ensembles named after the paper's models
+(per-channel scaled Gaussians + Student-t outlier mixtures — matching the
+paper's Fig. 3 profile of scaled weights spanning roughly ±8 after shared-
+exponent scaling).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticLM, make_data_iter
+from repro.launch.train import train_loop
+from repro.models import loss_fn
+from repro.models.common import ModelConfig
+
+ROOT = Path(__file__).resolve().parents[1]
+CACHE = ROOT / "results" / "bench_model"
+
+BENCH_CFG = ModelConfig(
+    name="bench-lm", family="dense",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+    d_ff=512, vocab=256, remat=False,
+)
+
+# corpus tuned to be CPU-learnable in a few hundred steps (sharp HMM +
+# heavy copy structure) — small models are also *more* quantization-
+# sensitive (paper Fig. 10), which makes format orderings measurable
+BENCH_CORPUS = dict(n_states=8, zipf_a=1.6, copy_prob=0.5, copy_back=8)
+
+TRAIN_STEPS = 600
+
+
+def bench_source(vocab: int, seed: int = 0) -> SyntheticLM:
+    return SyntheticLM(vocab=vocab, seed=seed, **BENCH_CORPUS)
+
+
+def trained_model(steps: int = TRAIN_STEPS):
+    """Train (or load the cached) benchmark LM. Returns (cfg, params)."""
+    from repro.models import init_params
+    from repro.optim.adamw import AdamW, cosine_schedule
+    from repro.train.state import init_state
+
+    cfg = BENCH_CFG
+    mgr = CheckpointManager(CACHE, keep=1, async_save=False)
+    optimizer = AdamW(lr=cosine_schedule(1e-3, steps // 20, steps))
+    template = init_state(init_params(cfg, jax.random.PRNGKey(0)), optimizer)
+    if mgr.latest_step() == steps:
+        state, _ = mgr.restore(template)
+        return cfg, state.params
+    state, losses = train_loop(cfg, steps=steps, batch=24, seq=128,
+                               lr=3e-3, log_every=200,
+                               source=bench_source(cfg.vocab))
+    mgr.save(state, steps, block=True)
+    print(f"[bench] trained {cfg.name}: loss {losses[0]:.3f} -> "
+          f"{losses[-1]:.3f}")
+    return cfg, state.params
+
+
+_LOSS_CACHE: dict = {}
+
+
+def _loss_fn(cfg):
+    """One jitted loss per config (avoids a model recompile per format)."""
+    if cfg not in _LOSS_CACHE:
+        _LOSS_CACHE[cfg] = jax.jit(lambda p, b: loss_fn(cfg, p, b)[0])
+    return _LOSS_CACHE[cfg]
+
+
+def eval_ppl(cfg, params, batches: int = 4, seed: int = 999):
+    """Held-out perplexity on the (same-distribution) synthetic corpus."""
+    src = bench_source(cfg.vocab)
+    it = make_data_iter(src, 16, 128, seed=seed)
+    fn = _loss_fn(cfg)
+    tot = 0.0
+    for _ in range(batches):
+        tot += float(fn(params, next(it)))
+    return float(np.exp(tot / batches))
+
+
+# --- LLM-statistics-matched weight ensembles (paper Fig. 3 profile) -------
+
+_MODEL_STATS = {
+    # name: (per-channel scale lognormal sigma, outlier df, outlier frac)
+    "llama3-like": (0.5, 4.0, 0.003),
+    "llama3.1-like": (0.5, 4.0, 0.004),
+    "phi3-like": (0.4, 3.0, 0.002),
+    "llama2-like": (0.6, 5.0, 0.003),
+    "mistral-like": (0.45, 4.0, 0.0025),
+}
+
+
+def weight_ensemble(name: str, rows: int = 2048, cols: int = 512,
+                    seed: int = 0) -> np.ndarray:
+    sigma, df, frac = _MODEL_STATS[name]
+    rng = np.random.default_rng((hash(name) & 0xFFFF, seed))
+    scale = np.exp(rng.normal(0, sigma, size=(rows, 1))) * 0.02
+    w = rng.standard_normal((rows, cols)) * scale
+    mask = rng.random((rows, cols)) < frac
+    w = np.where(mask, rng.standard_t(df, size=(rows, cols)) * scale * 8, w)
+    return w.astype(np.float32)
+
+
+def model_weight_matrices(params, min_size: int = 4096):
+    """The trained model's 2-D weights (real trained distributions)."""
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        if getattr(leaf, "ndim", 0) >= 2 and leaf.size >= min_size \
+                and "embed" not in name:
+            out[name] = np.asarray(leaf, np.float32).reshape(
+                -1, leaf.shape[-1])
+    return out
+
+
+class Csv:
+    """Collects `name,us_per_call,derived` rows for benchmarks/run.py."""
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us_per_call: float, derived: str):
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.2f},{derived}")
+
+    def extend(self, other: "Csv"):
+        self.rows.extend(other.rows)
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6, out

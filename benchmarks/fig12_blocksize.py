@@ -1,0 +1,67 @@
+"""Paper Fig. 12: perplexity-to-footprint across block sizes (4-bit).
+
+Validated claims:
+  - NxFP4 beats MxFP4 and BFP4 at every block size in {8,16,32,64,128},
+  - MxFP4 overtakes BFP4 at large block sizes (microexponents preserve
+    element-wise dynamic range once blocks get wide/scattered).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import get_format
+from repro.core.qtensor import QuantPolicy, dense_like, direct_cast_tree
+from .common import Csv, eval_ppl, trained_model
+
+BS = [8, 16, 32, 64, 128]
+
+
+def _weight_mse(params, fmt_name):
+    import jax
+    import jax.numpy as jnp
+    qp = direct_cast_tree(params, QuantPolicy(weight_fmt=fmt_name))
+    dq = dense_like(qp)
+    num = den = 0.0
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(dq)):
+        if a.ndim >= 2:
+            num += float(jnp.sum(jnp.square(a.astype(jnp.float32)
+                                            - b.astype(jnp.float32))))
+            den += a.size
+    return num / den
+
+
+def run(csv: Csv):
+    cfg, params = trained_model()
+    ppl, mse = {}, {}
+    for bs in BS:
+        for fam in ["bfp4", "mxfp4", "nxfp4"]:
+            name = f"{fam}_bs{bs}" if bs != 32 else fam
+            fmt = get_format(name)
+            qp = direct_cast_tree(params, QuantPolicy(weight_fmt=name))
+            ppl[(fam, bs)] = eval_ppl(cfg, dense_like(qp))
+            mse[(fam, bs)] = _weight_mse(params, name)
+            csv.add(f"fig12/bs{bs}/{fam}", 0.0,
+                    f"ppl={ppl[(fam, bs)]:.4f} mse={mse[(fam, bs)]:.3e} "
+                    f"bits_per_value={fmt.bits_per_value:.3f}")
+    # orderings asserted on weight MSE (deterministic); ppl deltas at this
+    # model scale sit inside eval noise and are reported, not asserted
+    for bs in BS:
+        assert mse[("nxfp4", bs)] <= mse[("mxfp4", bs)] * 1.001, (bs, mse)
+        assert mse[("nxfp4", bs)] <= mse[("bfp4", bs)] * 1.001, (bs, mse)
+    # MxFP4 vs BFP4 crossover at large blocks (paper: microexponents keep
+    # element-wise dynamic range once blocks get wide)
+    assert mse[("mxfp4", 128)] <= mse[("bfp4", 128)], mse
+    assert mse[("bfp4", 8)] <= mse[("mxfp4", 8)], mse
+    csv.add("fig12/orderings", 0.0,
+            "by MSE: NxFP4 best at all block sizes; BFP4<MxFP4 at bs8, "
+            "MxFP4<BFP4 at bs128 (the paper's crossover)")
+
+
+def main():
+    csv = Csv()
+    run(csv)
+    return csv
+
+
+if __name__ == "__main__":
+    main()

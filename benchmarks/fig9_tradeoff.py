@@ -1,0 +1,95 @@
+"""Paper Fig. 9: perplexity-to-footprint Pareto — weight-only and
+weights+KV-cache quantization.
+
+Footprint is MEASURED from the packed buffers (QTensor bytes for weights;
+packed-cache bytes-per-value for the KV cache at the paper's 2k sequence),
+not computed from nominal bit counts. Validated claims:
+  - NxFP consistently sits on the Pareto frontier,
+  - NxFP5 reaches MxFP6-level perplexity at a measurably smaller footprint
+    (paper: 13-16%% smaller).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import get_format
+from repro.core.qtensor import (QuantPolicy, dense_like, direct_cast_tree,
+                                tree_footprint_bytes)
+from .common import Csv, eval_ppl, trained_model
+
+SEQ = 2048  # paper's Fig. 9 sequence length for the KV share
+
+
+def kv_bytes(cfg, fmt_name, batch: int = 1) -> int:
+    """Packed KV-cache footprint at SEQ tokens (per paper Fig. 9 setup)."""
+    hd, kvh, L = cfg.hd, cfg.n_kv_heads, cfg.n_layers
+    n = batch * SEQ * kvh * hd * L * 2      # K and V values
+    if fmt_name is None:
+        return n * 2                         # bf16
+    f = get_format(fmt_name)
+    nb = -(-hd // f.block_size)
+    per_row = nb * f.bytes_per_block + nb * 2
+    return batch * SEQ * kvh * L * 2 * per_row
+
+
+def run(csv: Csv):
+    cfg, params = trained_model()
+    base_ppl = eval_ppl(cfg, params)
+    dense_w = tree_footprint_bytes(params)
+    csv.add("fig9/fp-baseline", 0.0,
+            f"ppl={base_ppl:.4f} weights_bytes={dense_w}")
+
+    pts_w, pts_wkv = {}, {}
+    for f in ["bfp4", "mxfp4", "nxfp4", "bfp5", "mxfp5", "nxfp5",
+              "bfp6", "mxfp6", "nxfp6"]:
+        qp = direct_cast_tree(params, QuantPolicy(weight_fmt=f))
+        wb = tree_footprint_bytes(qp)
+        ppl_w = eval_ppl(cfg, dense_like(qp))
+        pts_w[f] = (wb, ppl_w)
+        # weights + KV: fake-quant the KV path in the forward
+        cfg_kv = dataclasses.replace(cfg, kv_sim_fmt=f)
+        ppl_wkv = eval_ppl(cfg_kv, dense_like(qp))
+        tot = wb + kv_bytes(cfg, f)
+        pts_wkv[f] = (tot, ppl_wkv)
+        csv.add(f"fig9/weights/{f}", 0.0,
+                f"bytes={wb} ppl={ppl_w:.4f}")
+        csv.add(f"fig9/weights+kv/{f}", 0.0,
+                f"bytes={tot} ppl={ppl_wkv:.4f}")
+
+    # headline: NxFP5 vs MxFP6 footprint at comparable ppl. The whole-model
+    # saving is diluted here by never-quantized leaves (embeddings/norms are
+    # a large share of a 1.8M-param model, unlike the paper's 7-8B models),
+    # so assert on the quantized-tensor bytes; report both.
+    def qbytes(fmt):
+        from repro.core.qtensor import QTensor
+        import jax
+        qp = direct_cast_tree(params, QuantPolicy(weight_fmt=fmt))
+        return sum(l.nbytes() for l in jax.tree.leaves(
+            qp, is_leaf=lambda x: isinstance(x, QTensor))
+            if hasattr(l, "packed"))
+
+    nx5_b, nx5_p = pts_w["nxfp5"]
+    mx6_b, mx6_p = pts_w["mxfp6"]
+    saving_all = 1 - nx5_b / mx6_b
+    saving_q = 1 - qbytes("nxfp5") / qbytes("mxfp6")
+    csv.add("fig9/nxfp5-vs-mxfp6", 0.0,
+            f"quantized_tensor_saving={saving_q:.1%} "
+            f"whole_model_saving={saving_all:.1%} "
+            f"ppl_delta={nx5_p - mx6_p:+.4f} (paper: 13-16% at <=0.1 ppl)")
+    assert saving_q > 0.12, saving_q
+    assert nx5_p - mx6_p < 0.15 * mx6_p
+    # NxFP on the frontier at 4 bits (ppl, small tolerance for eval noise)
+    assert pts_w["nxfp4"][1] <= pts_w["mxfp4"][1] + 0.02
+    assert pts_wkv["nxfp4"][1] <= pts_wkv["mxfp4"][1] + 0.02
+
+
+def main():
+    csv = Csv()
+    run(csv)
+    return csv
+
+
+if __name__ == "__main__":
+    main()

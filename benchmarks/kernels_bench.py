@@ -1,0 +1,75 @@
+"""Paper Fig. 7 (dequantization flow) — kernel benchmark.
+
+CPU container: the Pallas kernels execute in interpret mode (Python), which
+is not representative of TPU wall time, so the timed path here is the
+jit'd XLA implementation (the math the kernels implement); we additionally
+report the kernel-path analytic HBM traffic (packed bytes vs bf16 bytes)
+— the quantity that sets TPU wall time on the memory-bound roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import QTensor, get_format
+from repro.kernels.ops import qmatmul, quantize_qtensor, decode_attention
+from .common import Csv, timed
+
+
+def run(csv: Csv):
+    rng = np.random.default_rng(0)
+    m, k, n = 64, 2048, 2048
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((k, n)) * 0.05).astype(np.float32))
+
+    wq = {f: QTensor.quantize(w, f, axis=0)
+          for f in ["nxfp4", "mxfp4", "nxfp8"]}
+    us_dense, ref = timed(jax.jit(
+        lambda a, b: a @ b.astype(jnp.float32)), x, w)
+    csv.add("kernels/matmul/bf16-dense", us_dense,
+            f"weights_bytes={w.size * 2}")
+    for f, q in wq.items():
+        fn = jax.jit(lambda a, qq=q: qmatmul(a, qq, impl="xla"))
+        us, y = timed(fn, x)
+        err = float(jnp.max(jnp.abs(y - ref)) / jnp.max(jnp.abs(ref)))
+        csv.add(f"kernels/matmul/{f}", us,
+                f"packed_bytes={q.nbytes()} "
+                f"hbm_reduction={w.size * 2 / q.nbytes():.2f}x "
+                f"rel_err={err:.2e}")
+
+    # quantize throughput (Algorithm 1)
+    big = jnp.asarray(rng.standard_normal((4096, 512)).astype(np.float32))
+    for f in ["nxfp4", "mxfp4", "nxfp8"]:
+        fn = jax.jit(lambda a, ff=f: quantize_qtensor(a, ff, axis=-1,
+                                                      impl="xla").packed)
+        us, _ = timed(fn, big)
+        gbps = big.size * 4 / (us / 1e6) / 1e9
+        csv.add(f"kernels/quantize/{f}", us, f"throughput={gbps:.2f}GB/s")
+
+    # decode attention over a quantized cache
+    b, s, h, kvh, d = 4, 4096, 8, 4, 64
+    q = jnp.asarray(rng.standard_normal((b, h, d)).astype(np.float32))
+    kc = jnp.asarray((rng.standard_normal((b, s, kvh, d)) * 0.3)
+                     .astype(np.float32))
+    kq = quantize_qtensor(kc, "nxfp4", axis=-1, impl="xla")
+    vq = quantize_qtensor(kc, "nxfp4", axis=-1, impl="xla")
+    lengths = jnp.full((b,), s, jnp.int32)
+    fn = jax.jit(lambda qq: decode_attention(qq, kq, vq, lengths, kvh,
+                                             impl="xla"))
+    us, _ = timed(fn, q)
+    kv_bf16 = b * s * kvh * d * 2 * 2
+    kv_packed = int(np.prod(kq.packed.shape)) * 2 + \
+        int(np.prod(kq.meta.shape)) * 2 * 2
+    csv.add("kernels/decode-attn/nxfp4-kv-4k", us,
+            f"kv_hbm_reduction={kv_bf16 / kv_packed:.2f}x")
+
+
+def main():
+    csv = Csv()
+    run(csv)
+    return csv
+
+
+if __name__ == "__main__":
+    main()

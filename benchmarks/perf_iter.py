@@ -1,0 +1,155 @@
+"""Perf-iteration harness: re-lower one cell with a named variant, diff the
+roofline terms against the stored baseline, append to the §Perf log.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter --arch falcon_mamba_7b \
+        --shape train_4k --mesh pod --variant bf16_grads
+
+Variants are small, named deltas over the baseline launcher configuration —
+each one encodes a hypothesis from EXPERIMENTS.md §Perf.
+"""
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+VARIANTS = {}
+
+
+def variant(name):
+    def deco(fn):
+        VARIANTS[name] = fn
+        return fn
+    return deco
+
+
+@variant("baseline")
+def _baseline():
+    return {}
+
+
+@variant("no_fsdp")
+def _no_fsdp():
+    return {"fsdp": False}
+
+
+@variant("fsdp")
+def _fsdp():
+    return {"fsdp": True}
+
+
+@variant("micro16")
+def _micro16():
+    return {"n_micro": 16}
+
+
+@variant("micro4")
+def _micro4():
+    return {"n_micro": 4}
+
+
+@variant("micro2")
+def _micro2():
+    return {"n_micro": 2}
+
+
+@variant("bf16_grads")
+def _bf16_grads():
+    """Accumulate/all-reduce gradients in bf16 (halves DP wire bytes)."""
+    import repro.train.step as ts
+    import jax.numpy as jnp
+    ts.GRAD_ACCUM_DTYPE = jnp.bfloat16
+    return {}
+
+
+@variant("kv_bf16")
+def _kv_bf16():
+    """Serving without KV quantization (paper-baseline comparison)."""
+    return {"quantized": False}
+
+
+@variant("nxfp5")
+def _nxfp5():
+    return {"kv_fmt": "nxfp5", "weight_fmt": "nxfp5"}
+
+
+@variant("nxfp8")
+def _nxfp8():
+    return {"kv_fmt": "nxfp8", "weight_fmt": "nxfp8"}
+
+
+@variant("no_banded")
+def _no_banded():
+    """Disable banded SWA (measures the pre-optimization baseline)."""
+    import repro.models.attention as att
+    att.BANDED_SWA = False
+    return {}
+
+
+@variant("repl_act")
+def _repl_act():
+    """Decode: replicate activations into matmuls instead of gathering
+    2-D-sharded weights (weight-stationary serving)."""
+    import repro.kernels.ops as ops
+    ops.REPLICATED_ACT_MATMUL = True
+    return {}
+
+
+@variant("psum_bf16")
+def _psum_bf16():
+    """bf16 cross-shard partial sums (halves TP all-reduce wire bytes)."""
+    import jax.numpy as jnp
+    import repro.kernels.ops as ops
+    ops.PSUM_DTYPE = jnp.bfloat16
+    return {}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--tag", default=None)
+    args = ap.parse_args()
+
+    overrides = VARIANTS[args.variant]()
+
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_production_mesh
+    from benchmarks.roofline import analyze
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+    res = lower_cell(args.arch, args.shape, mesh, **overrides)
+    tag = args.tag or args.variant
+    out = RESULTS / "perf" / f"{args.arch}__{args.shape}__{args.mesh}__{tag}.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(res, indent=1))
+
+    row = analyze(res)
+    base_path = RESULTS / "dryrun" / \
+        f"{args.arch}__{args.shape}__{args.mesh}.json"
+    line = (f"{args.arch}/{args.shape}/{args.mesh} [{tag}] "
+            f"cmp={row['compute_s']:.3e}s mem={row['memory_s_kernel']:.3e}s "
+            f"coll={row['collective_s']:.3e}s dom={row['dominant']} "
+            f"useful={row['useful_ratio']:.2f} "
+            f"temp={row['hbm_temp_gib']:.1f}GiB")
+    if base_path.exists():
+        base = analyze(json.loads(base_path.read_text()))
+        key = {"compute": "compute_s", "memory": "memory_s_kernel",
+               "collective": "collective_s"}[base["dominant"]]
+        delta = (row[key] - base[key]) / max(base[key], 1e-30)
+        line += (f" | baseline dom {base['dominant']}={base[key]:.3e}s "
+                 f"-> {row[key]:.3e}s ({delta:+.1%})")
+    print(line)
+    with open(RESULTS / "perf" / "log.txt", "a") as f:
+        f.write(line + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Benchmark runner — one entry per paper table/figure + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig8,table1
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from .common import Csv
+
+_SUITES = ["fig3", "fig8", "table1", "fig9", "fig10", "fig11", "fig12",
+           "kernels", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(_SUITES))
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else _SUITES
+
+    csv = Csv()
+    print("name,us_per_call,derived")
+    failures = []
+    for suite in only:
+        try:
+            if suite == "fig3":
+                from . import fig3_profile as m
+            elif suite == "fig8":
+                from . import fig8_quant_error as m
+            elif suite == "table1":
+                from . import table1_perplexity as m
+            elif suite == "fig9":
+                from . import fig9_tradeoff as m
+            elif suite == "fig10":
+                from . import fig10_accuracy as m
+            elif suite == "fig11":
+                from . import fig11_remap_sweep as m
+            elif suite == "fig12":
+                from . import fig12_blocksize as m
+            elif suite == "kernels":
+                from . import kernels_bench as m
+            elif suite == "roofline":
+                from . import roofline as m
+                m.main(csv)
+                continue
+            else:
+                raise ValueError(suite)
+            m.run(csv)
+        except Exception as e:  # keep going; report at the end
+            failures.append((suite, repr(e)))
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED suites: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Fault-tolerant checkpointing (no orbax in this environment).
+
+Design for 1000+-node operation:
+  - atomic: write to ``<dir>.tmp`` then ``os.rename`` — a crash mid-write
+    never corrupts the latest checkpoint; restore picks the newest COMPLETE
+    step (marker file written last).
+  - async: a single background thread serializes device->host transfer
+    results so the train loop is not blocked on disk.
+  - elastic: leaves are saved as *logical* (unsharded) arrays + a JSON
+    manifest of the tree structure, so a restart may use a different mesh /
+    data-parallel degree (re-sharding happens at device_put on restore).
+    In a true multi-host deployment each host writes its addressable
+    shards; here (single host) the full array is addressable.
+  - keep-k GC, QTensor-aware (packed/meta/aux round-trip).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.qtensor import QTensor
+
+_MARKER = "COMPLETE"
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(
+        tree, is_leaf=lambda l: isinstance(l, QTensor))
+    return leaves, treedef
+
+
+def save_pytree(tree, path: Path):
+    path = Path(path)
+    tmp = path.with_suffix(f".tmp{os.getpid()}.{threading.get_ident()}")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves, treedef = _flatten(tree)
+    manifest = {"treedef": str(treedef), "leaves": []}
+    for i, leaf in enumerate(leaves):
+        if isinstance(leaf, QTensor):
+            np.save(tmp / f"leaf{i}_packed.npy", np.asarray(leaf.packed))
+            np.save(tmp / f"leaf{i}_meta.npy", np.asarray(leaf.meta))
+            manifest["leaves"].append({
+                "kind": "qtensor", "fmt": leaf.fmt_name,
+                "shape": list(leaf.shape), "axis": leaf.axis,
+                "orig_len": leaf.orig_len})
+        else:
+            np.save(tmp / f"leaf{i}.npy", np.asarray(leaf))
+            manifest["leaves"].append({"kind": "array"})
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    (tmp / _MARKER).touch()
+    if path.exists():
+        shutil.rmtree(tmp)   # concurrent writer won the race; keep theirs
+        return
+    os.rename(tmp, path)
+
+
+def load_pytree(template, path: Path, shardings=None):
+    """Restore into the structure of ``template`` (values ignored)."""
+    path = Path(path)
+    assert (path / _MARKER).exists(), f"incomplete checkpoint: {path}"
+    leaves, treedef = _flatten(template)
+    manifest = json.loads((path / "manifest.json").read_text())
+    out = []
+    for i, (leaf, info) in enumerate(zip(leaves, manifest["leaves"])):
+        if info["kind"] == "qtensor":
+            packed = np.load(path / f"leaf{i}_packed.npy")
+            meta = np.load(path / f"leaf{i}_meta.npy")
+            out.append(QTensor(packed, meta, info["fmt"],
+                               tuple(info["shape"]), info["axis"],
+                               info["orig_len"]))
+        else:
+            out.append(np.load(path / f"leaf{i}.npy"))
+    restored = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        restored = jax.device_put(restored, shardings)
+    return restored
+
+
+class CheckpointManager:
+    """Step-indexed checkpoints with keep-k GC and async save."""
+
+    def __init__(self, directory, keep: int = 3, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._err: Optional[BaseException] = None
+        self._thread = None
+        if async_save:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            tree, step = item
+            try:
+                save_pytree(tree, self.dir / f"step_{step:08d}")
+                self._gc()
+            except BaseException as e:  # surfaced on next save()
+                self._err = e
+
+    def save(self, tree, step: int, block: bool = False):
+        if self._err:
+            raise self._err
+        host_tree = jax.device_get(tree)
+        if self._thread is None or block:
+            save_pytree(host_tree, self.dir / f"step_{step:08d}")
+            self._gc()
+        else:
+            self._q.put((host_tree, step))
+
+    def steps(self):
+        out = []
+        for p in sorted(self.dir.glob("step_*")):
+            if (p / _MARKER).exists():
+                out.append(int(p.name.split("_")[1]))
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template, step: Optional[int] = None, shardings=None):
+        step = self.latest_step() if step is None else step
+        assert step is not None, "no checkpoint to restore"
+        return load_pytree(template, self.dir / f"step_{step:08d}",
+                           shardings), step
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    def close(self):
+        if self._thread is not None:
+            self._q.put(None)
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,86 @@
+"""Assigned architectures (exact public configs) + reduced smoke variants.
+
+``get_config(arch)`` -> full ModelConfig; ``get_smoke_config(arch)`` -> a
+tiny same-family variant for CPU tests; ``input_specs(arch, shape)`` ->
+ShapeDtypeStruct stand-ins for every model input of a dry-run cell.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "qwen2_moe_a2_7b",
+    "phi3_5_moe_42b",
+    "whisper_tiny",
+    "falcon_mamba_7b",
+    "h2o_danube_3_4b",
+    "llama3_405b",
+    "deepseek_67b",
+    "starcoder2_3b",
+    "llama_3_2_vision_90b",
+    "hymba_1_5b",
+    # the paper's own evaluation models (class representatives)
+    "llama2_7b",
+    "llama3_8b",
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+SHAPES: Dict[str, dict] = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def _module(arch: str):
+    arch = _ALIASES.get(arch, arch)
+    return importlib.import_module(f"repro.configs.{arch}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def shape_supported(cfg: ModelConfig, shape: str) -> bool:
+    """long_500k needs sub-quadratic attention (see DESIGN.md skip list)."""
+    if shape == "long_500k":
+        return cfg.sub_quadratic
+    return True
+
+
+def input_specs(arch: str, shape: str, smoke: bool = False):
+    """ShapeDtypeStruct stand-ins for a (arch x shape) dry-run cell.
+
+    train:   {tokens (B, S) i32}  [+ frames / vision stubs]
+    prefill: {tokens (B, S) i32}  [+ stubs]
+    decode:  {tokens (B, 1) i32}  (the KV cache spec comes separately via
+             repro.models.init_cache_specs)
+    """
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    sh = SHAPES[shape]
+    b, s = sh["global_batch"], sh["seq_len"]
+    i32 = jnp.int32
+    specs = {}
+    if sh["kind"] == "decode":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_audio_frames, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        specs["vision"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_vision_tokens, cfg.d_model), jnp.float32)
+    return cfg, specs

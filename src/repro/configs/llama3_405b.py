@@ -1,0 +1,19 @@
+"""Llama-3-405B [arXiv:2407.21783; dense GQA].
+
+126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256.
+Full attention -> long_500k skipped (DESIGN.md). NxFP4 KV is what makes
+decode_32k x batch 128 fit 16 GB/chip HBM on the 256-chip pod.
+"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b", family="dense",
+    n_layers=126, d_model=16384, n_heads=128, n_kv_heads=8,
+    d_ff=53248, vocab=128256, rope_theta=500_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="llama3-405b-smoke", family="dense",
+    n_layers=3, d_model=128, n_heads=8, n_kv_heads=2,
+    d_ff=384, vocab=256,
+)

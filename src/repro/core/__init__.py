@@ -1,0 +1,18 @@
+"""NxFP numeric core: formats, Algorithm-1 quantizer, packing, QTensor."""
+from .formats import BlockFormat, ElementFormat, get_format, ELEMENT_FORMATS
+from .levels import LevelTable, level_table
+from .pack import bytes_per_block, pack_codes, unpack_codes
+from .quantize import (dequantize, dequantize_blocks, from_blocks, meta_fields,
+                       pack_meta, quantize, quantize_blocks, to_blocks)
+from .qtensor import (QTensor, QuantPolicy, dense_like, direct_cast_tree,
+                      tree_footprint_bytes)
+
+__all__ = [
+    "BlockFormat", "ElementFormat", "get_format", "ELEMENT_FORMATS",
+    "LevelTable", "level_table",
+    "bytes_per_block", "pack_codes", "unpack_codes",
+    "quantize", "dequantize", "quantize_blocks", "dequantize_blocks",
+    "to_blocks", "from_blocks", "meta_fields", "pack_meta",
+    "QTensor", "QuantPolicy", "dense_like", "direct_cast_tree",
+    "tree_footprint_bytes",
+]

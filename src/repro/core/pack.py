@@ -1,0 +1,56 @@
+"""Sub-byte bit-packing of element codes into per-block byte buffers.
+
+Codes are packed *per quantization block* so a block of 32 k-bit codes is
+exactly ``4*k`` bytes and no code ever straddles a block (hence never a
+device-shard) boundary. Within a block, codes are laid out little-endian at
+bit offsets ``i*k``; a code can straddle at most two bytes (k <= 8).
+
+All functions are jit-friendly (static index arithmetic + scatter-add).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = ["pack_codes", "unpack_codes", "bytes_per_block"]
+
+
+def bytes_per_block(block_size: int, bits: int) -> int:
+    total = block_size * bits
+    assert total % 8 == 0, (block_size, bits)
+    return total // 8
+
+
+def _layout(block_size: int, bits: int):
+    p = np.arange(block_size) * bits
+    lo = p // 8
+    off = p % 8
+    bpb = bytes_per_block(block_size, bits)
+    hi = np.minimum(lo + 1, bpb - 1)  # clamped; spill contribution is 0 there
+    return lo, hi, off, bpb
+
+
+def pack_codes(codes, bits: int):
+    """(..., nb, B) uint8 codes -> (..., nb, B*bits//8) uint8 bytes."""
+    B = codes.shape[-1]
+    lo, hi, off, bpb = _layout(B, bits)
+    c = codes.astype(jnp.int32)
+    shifted = c << jnp.asarray(off)
+    lo_part = shifted & 0xFF
+    hi_part = shifted >> 8
+    out = jnp.zeros((*codes.shape[:-1], bpb), jnp.int32)
+    out = out.at[..., jnp.asarray(lo)].add(lo_part)
+    out = out.at[..., jnp.asarray(hi)].add(hi_part)
+    return out.astype(jnp.uint8)
+
+
+def unpack_codes(packed, bits: int, block_size: int):
+    """(..., nb, bpb) uint8 bytes -> (..., nb, block_size) uint8 codes."""
+    lo, hi, off, bpb = _layout(block_size, bits)
+    assert packed.shape[-1] == bpb, (packed.shape, bpb)
+    b = packed.astype(jnp.int32)
+    lo_b = b[..., jnp.asarray(lo)]
+    hi_b = b[..., jnp.asarray(hi)]
+    word = lo_b | (hi_b << 8)
+    mask = (1 << bits) - 1
+    return ((word >> jnp.asarray(off)) & mask).astype(jnp.uint8)

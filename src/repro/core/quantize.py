@@ -1,0 +1,353 @@
+"""MSE-based direct-cast quantization (paper Algorithm 1) and dequantization.
+
+This is the *reference* (pure-jnp) implementation of the NxFP family codec;
+it is the oracle against which the Pallas kernels are validated, and the
+implementation used on non-TPU backends (including the 512-device dry-run).
+
+Semantics (per block of ``block_size`` values):
+
+  1. ``V_max = max|v|``; per candidate element format,
+     ``E_shared = floor(log2 V_max) - emax_fmt`` (MX-spec convention: the
+     block max lands in the top octave of the element grid).
+  2. NanoMantissa candidates (Alg. 1): ``{round_2b(V_max / top_level - 1), 0}``
+     — the Fig.-4-consistent rounding of the block max against the largest
+     representable level; ``nano_search="exhaustive"`` tries all four codes.
+  3. Each candidate (element format x nano) quantizes
+     ``v / ((1 + nano/4) * 2**E_shared)`` to the element grid
+     (round-to-nearest; code recycling adds the -0 remap level).
+  4. The candidate with the lowest MSE *in original units* wins (Alg. 1 as
+     printed compares scaled-unit MSEs across differently-scaled candidates;
+     we compare in original units, which is the well-defined objective —
+     noted in DESIGN.md).
+
+Per-block metadata is packed into a uint16:
+  bits[0:8] = E_shared + 128, bits[8:10] = nano, bit[10] = fmt (1 = MxFP).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import BlockFormat, get_format
+from .levels import level_table
+
+__all__ = [
+    "quantize_blocks",
+    "quantize_blocks_gatherfree",
+    "dequantize_blocks",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "to_blocks",
+    "from_blocks",
+    "meta_fields",
+    "pack_meta",
+]
+
+_E_BIAS = 128
+
+
+def _floor_log2(x):
+    """floor(log2 x) for x > 0 (exact, via frexp); returns int32."""
+    _, e = jnp.frexp(x)
+    return (e - 1).astype(jnp.int32)
+
+
+def meta_fields(meta):
+    """Unpack uint16 block metadata -> (E_shared int32, nano int32, fmt int32)."""
+    m = meta.astype(jnp.int32)
+    return (m & 0xFF) - _E_BIAS, (m >> 8) & 0x3, (m >> 10) & 0x1
+
+
+def pack_meta(e_shared, nano, fmt_bit):
+    e = jnp.clip(e_shared, -_E_BIAS, 127) + _E_BIAS
+    return (e | (nano << 8) | (fmt_bit << 10)).astype(jnp.uint16)
+
+
+def _candidates(fmt: BlockFormat):
+    """Static candidate list: (fmt_bit, LevelTable, nano_mode) tuples.
+
+    nano_mode: None = nano fixed 0; "round" = Alg.-1 rounded nano;
+    int = that exact nano code (exhaustive search).
+    """
+    cands = []
+    for fmt_bit, elem in fmt.elem_formats:
+        table = level_table(elem.name, fmt.cr, fmt.recycle)
+        if not fmt.nm:
+            cands.append((fmt_bit, table, None))
+        elif fmt.nano_search == "exhaustive":
+            cands.extend((fmt_bit, table, n) for n in range(4))
+        else:  # paper: try the rounded nano and zero (Alg. 1)
+            cands.append((fmt_bit, table, "round"))
+            cands.append((fmt_bit, table, None))
+    return cands
+
+
+def _quantize_candidate(xb, vmax, fmt_bit, table, nano_mode):
+    """Quantize blocks with one (element format, nano) candidate.
+
+    xb: (..., nb, B) float32; vmax: (..., nb) float32.
+    Returns codes(uint8), deq(f32), mse(f32 per block), E(int32), nano(int32).
+    """
+    e_shared = _floor_log2(jnp.maximum(vmax, jnp.finfo(jnp.float32).tiny))
+    e_shared = e_shared - table.emax
+    # lower clamp -126 keeps 1/scale finite (2**126 < f32 max); zero blocks
+    # then encode as all-zero codes instead of NaN-snapped garbage.
+    e_shared = jnp.clip(e_shared, -126, 127)
+    scale0 = jnp.ldexp(jnp.float32(1.0), e_shared)
+    if nano_mode is None:
+        nano = jnp.zeros_like(e_shared)
+    elif nano_mode == "round":
+        r = vmax / (scale0 * np.float32(table.max_pos))
+        nano = jnp.clip(jnp.round((r - 1.0) * 4.0), 0, 3).astype(jnp.int32)
+    else:
+        nano = jnp.full_like(e_shared, int(nano_mode))
+    scale = scale0 * (1.0 + nano.astype(jnp.float32) * 0.25)
+    inv = (1.0 / scale)[..., None]
+
+    vp = xb * inv
+    bounds = jnp.asarray(table.boundaries)
+    idx = jnp.searchsorted(bounds, vp)
+    codes = jnp.asarray(table.codes_sorted)[idx]
+    deq = jnp.asarray(table.values_sorted)[idx] * scale[..., None]
+    mse = jnp.mean(jnp.square(deq - xb), axis=-1)
+    return codes, deq, mse, e_shared, nano
+
+
+def quantize_blocks(xb, fmt: BlockFormat, return_debug: bool = False):
+    """Quantize blocked input.
+
+    Args:
+      xb: (..., nb, block_size) float array.
+      fmt: BlockFormat.
+      return_debug: also return (deq, per-candidate mses) for tests.
+
+    Returns:
+      codes: (..., nb, block_size) uint8
+      meta:  (..., nb) uint16
+    """
+    xb = jnp.nan_to_num(xb.astype(jnp.float32), posinf=1e30, neginf=-1e30)
+    vmax = jnp.max(jnp.abs(xb), axis=-1)
+
+    results = [
+        _quantize_candidate(xb, vmax, fb, tb, nm)
+        for fb, tb, nm in _candidates(fmt)
+    ]
+    mses = jnp.stack([r[2] for r in results])            # (C, ..., nb)
+    best = jnp.argmin(mses, axis=0)                      # (..., nb)
+
+    def _sel(field_idx, per_elem=False):
+        stk = jnp.stack([r[field_idx] for r in results])  # (C, ...)
+        b = best[None, ..., None] if per_elem else best[None]
+        return jnp.take_along_axis(stk, b.astype(jnp.int32), axis=0)[0]
+
+    codes = _sel(0, per_elem=True)
+    e_shared = _sel(3)
+    nano = _sel(4)
+    fmt_bits = np.array([fb for fb, _, _ in _candidates(fmt)], np.int32)
+    fmt_bit = jnp.asarray(fmt_bits)[best]
+    meta = pack_meta(e_shared, nano, fmt_bit)
+    if return_debug:
+        deq = _sel(1, per_elem=True)
+        return codes, meta, deq, mses
+    return codes, meta
+
+
+def dequantize_blocks(codes, meta, fmt: BlockFormat, dtype=jnp.float32):
+    """Decode blocked codes. codes (..., nb, B) uint8; meta (..., nb) uint16."""
+    e_shared, nano, fmt_bit = meta_fields(meta)
+    scale = jnp.ldexp(1.0 + nano.astype(jnp.float32) * 0.25, e_shared)
+    luts = {fb: jnp.asarray(level_table(el.name, fmt.cr, fmt.recycle).decode)
+            for fb, el in fmt.elem_formats}
+    c = codes.astype(jnp.int32)
+    if fmt.am:
+        v = jnp.where((fmt_bit == 1)[..., None], luts[1][c], luts[0][c])
+    else:
+        v = next(iter(luts.values()))[c]
+    return (v * scale[..., None]).astype(dtype)
+
+
+def to_blocks(x, block_size: int, axis: int = -1):
+    """Move ``axis`` last, zero-pad to a block multiple, reshape to blocks.
+
+    Returns (xb, orig_len) with xb shaped (..., nb, block_size).
+    """
+    x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    pad = (-n) % block_size
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x.reshape(*x.shape[:-1], (n + pad) // block_size, block_size), n
+
+
+def from_blocks(xb, orig_len: int, axis: int = -1):
+    """Inverse of to_blocks."""
+    x = xb.reshape(*xb.shape[:-2], xb.shape[-2] * xb.shape[-1])
+    return jnp.moveaxis(x[..., :orig_len], -1, axis)
+
+
+def quantize(x, fmt, axis: int = -1):
+    """Quantize a dense array along ``axis``. Returns (codes, meta, orig_len).
+
+    codes: (..., nb, B) uint8 with the block axis last; meta (..., nb) uint16.
+    """
+    if isinstance(fmt, str):
+        fmt = get_format(fmt)
+    xb, n = to_blocks(x, fmt.block_size, axis)
+    codes, meta = quantize_blocks(xb, fmt)
+    return codes, meta, n
+
+
+def dequantize(codes, meta, fmt, orig_len: int, axis: int = -1,
+               dtype=jnp.float32):
+    if isinstance(fmt, str):
+        fmt = get_format(fmt)
+    deq = dequantize_blocks(codes, meta, fmt, dtype)
+    return from_blocks(deq, orig_len, axis)
+
+
+def quantize_blocks_gatherfree(xb, fmt: BlockFormat):
+    """Gather-free variant of quantize_blocks (bit-identical results).
+
+    Uses a one-hot matvec against the level grid instead of
+    searchsorted+take (as the Pallas kernel does). Needed wherever XLA's
+    SPMD partitioner must not see gathers — e.g. inside the pod-axis
+    shard_map of the gradient-compression path, where PartitionGather
+    CHECK-crashes on 512-device pod subgroups (DESIGN.md sharding lessons).
+    """
+    xb = jnp.nan_to_num(xb.astype(jnp.float32), posinf=1e30, neginf=-1e30)
+    vmax = jnp.max(jnp.abs(xb), axis=-1)
+
+    best_mse = jnp.full(vmax.shape, jnp.inf, jnp.float32)
+    best_codes = jnp.zeros(xb.shape, jnp.int32)
+    best_meta = jnp.zeros(vmax.shape, jnp.int32)
+    for fmt_bit, table, nano_mode in _candidates(fmt):
+        e_shared = _floor_log2(jnp.maximum(vmax, jnp.finfo(jnp.float32).tiny))
+        e_shared = jnp.clip(e_shared - table.emax, -126, 127)
+        scale0 = jnp.ldexp(jnp.float32(1.0), e_shared)
+        if nano_mode is None:
+            nano = jnp.zeros_like(e_shared)
+        elif nano_mode == "round":
+            r = vmax / (scale0 * np.float32(table.max_pos))
+            nano = jnp.clip(jnp.round((r - 1.0) * 4.0), 0, 3).astype(jnp.int32)
+        else:
+            nano = jnp.full_like(e_shared, int(nano_mode))
+        scale = scale0 * (1.0 + nano.astype(jnp.float32) * 0.25)
+        vp = xb * (1.0 / scale)[..., None]
+        idx = jnp.sum((vp[..., None] > jnp.asarray(table.boundaries))
+                      .astype(jnp.int32), axis=-1)
+        onehot = idx[..., None] == jnp.arange(table.num_levels,
+                                              dtype=jnp.int32)
+        values = jnp.sum(onehot.astype(jnp.float32)
+                         * jnp.asarray(table.values_sorted), axis=-1)
+        codes = jnp.sum(onehot.astype(jnp.int32)
+                        * jnp.asarray(table.codes_sorted.astype(np.int32)),
+                        axis=-1)
+        deq = values * scale[..., None]
+        mse = jnp.mean(jnp.square(deq - xb), axis=-1)
+        take = mse < best_mse
+        best_codes = jnp.where(take[..., None], codes, best_codes)
+        meta = (e_shared + _E_BIAS) | (nano << 8) | (fmt_bit << 10)
+        best_meta = jnp.where(take, meta, best_meta)
+        best_mse = jnp.where(take, mse, best_mse)
+    return best_codes.astype(jnp.uint8), best_meta.astype(jnp.uint16)
+
+
+def quantize_blocks_arith(xb, fmt: BlockFormat):
+    """Arithmetic (gather-free AND one-hot-free) block quantizer.
+
+    Rounds onto the element grid with exponent/ulp arithmetic instead of a
+    one-hot matvec — O(1) memory overhead per element, required for
+    wire-compressing multi-GB gradient tensors (a 255-level one-hot
+    materializes ~256x the input bytes). Uses round-to-nearest-even at
+    level midpoints (the reference uses ties-down), so codes can differ
+    from quantize_blocks at exact midpoints only; decode compatibility is
+    exact (same grid).
+    """
+    xb = jnp.nan_to_num(xb.astype(jnp.float32), posinf=1e30, neginf=-1e30)
+    vmax = jnp.max(jnp.abs(xb), axis=-1)
+
+    best_mse = jnp.full(vmax.shape, jnp.inf, jnp.float32)
+    best_codes = jnp.zeros(xb.shape, jnp.int32)
+    best_meta = jnp.zeros(vmax.shape, jnp.int32)
+    tiny = jnp.finfo(jnp.float32).tiny
+    for fmt_bit, table, nano_mode in _candidates(fmt):
+        elem = table.fmt
+        bits, mbits, bias = elem.bits, elem.mbits, elem.bias
+        e_shared = _floor_log2(jnp.maximum(vmax, tiny)) - table.emax
+        e_shared = jnp.clip(e_shared, -126, 127)
+        scale0 = jnp.ldexp(jnp.float32(1.0), e_shared)
+        if nano_mode is None:
+            nano = jnp.zeros_like(e_shared)
+        elif nano_mode == "round":
+            r = vmax / (scale0 * np.float32(table.max_pos))
+            nano = jnp.clip(jnp.round((r - 1.0) * 4.0), 0, 3).astype(jnp.int32)
+        else:
+            nano = jnp.full_like(e_shared, int(nano_mode))
+        scale = scale0 * (1.0 + nano.astype(jnp.float32) * 0.25)
+        vp = xb * (1.0 / scale)[..., None]
+        a = jnp.abs(vp)
+        neg = vp < 0
+
+        if elem.is_bfp:
+            mmax = (1 << (bits - 1)) - 1
+            q = jnp.clip(jnp.round(a), 0, mmax)
+            mag = q.astype(jnp.int32)
+            val = q
+            smallest = 1.0
+        else:
+            emin = 1 - bias
+            a_c = jnp.minimum(a, np.float32(table.max_pos))
+            e_v = _floor_log2(jnp.maximum(a_c, tiny))
+            e_eff = jnp.maximum(e_v, emin)
+            ulp = jnp.ldexp(jnp.float32(1.0), e_eff - mbits)
+            q = jnp.round(a_c / ulp) * ulp
+            q = jnp.minimum(q, np.float32(table.max_pos))
+            # rebuild fields from q (self-consistent after binade carry)
+            e_q = _floor_log2(jnp.maximum(q, tiny))
+            normal = q >= np.float32(2.0 ** emin)
+            e_field = jnp.where(normal, e_q + bias, 0)
+            frac = q * jnp.ldexp(jnp.float32(1.0),
+                                 -jnp.where(normal, e_q, emin))
+            m_field = jnp.round(
+                jnp.where(normal, frac - 1.0, frac) * (1 << mbits))
+            mag = ((e_field << mbits) | m_field.astype(jnp.int32))
+            mag = jnp.where(q == 0.0, 0, mag)
+            val = q
+            smallest = (0.5 ** mbits) * 2.0 ** emin
+        codes = jnp.where(neg, (1 << (bits - 1)) | mag, mag)
+        val = jnp.where(neg, -val, val)
+        if fmt.cr:
+            # "-0" must encode as +0 (code 10...0 now MEANS -smallest/2)...
+            codes = jnp.where((mag == 0) & neg, 0, codes)
+            # ...and the recycle window (-0.75, -0.25) x smallest maps to it
+            win = (vp > np.float32(-0.75 * smallest)) & \
+                  (vp < np.float32(-0.25 * smallest))
+            codes = jnp.where(win, 1 << (bits - 1), codes)
+            val = jnp.where(win, np.float32(-0.5 * smallest), val)
+        deq = val * scale[..., None]
+        mse = jnp.mean(jnp.square(deq - xb), axis=-1)
+        take = mse < best_mse
+        best_codes = jnp.where(take[..., None], codes, best_codes)
+        meta = (e_shared + _E_BIAS) | (nano << 8) | (fmt_bit << 10)
+        best_meta = jnp.where(take, meta, best_meta)
+        best_mse = jnp.where(take, mse, best_mse)
+    return best_codes.astype(jnp.uint8), best_meta.astype(jnp.uint16)
+
+
+def fake_quant(x, fmt, axis: int = -1):
+    """Direct-cast roundtrip (quantize -> dequantize) in original layout.
+
+    Numerically identical to what a quantized buffer stores; used to
+    simulate quantized-KV inference inside a batched forward pass (paper
+    §7.1 "weights and KV cache") and for MSE experiments.
+    """
+    if isinstance(fmt, str):
+        fmt = get_format(fmt)
+    xb, n = to_blocks(x, fmt.block_size, axis)
+    codes, meta = quantize_blocks(xb, fmt)
+    deq = dequantize_blocks(codes, meta, fmt, jnp.float32)
+    return from_blocks(deq, n, axis).astype(x.dtype)

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, TextCorpus, make_data_iter
+
+__all__ = ["SyntheticLM", "TextCorpus", "make_data_iter"]

@@ -1,0 +1,12 @@
+"""NxFP TPU kernels (Pallas) + jit wrappers + pure-jnp oracles.
+
+The paper's compute hot-spot is the on-the-fly dequantization pipeline
+(Fig. 7); the three kernels here are its TPU-native realizations:
+
+  nxfp_matmul     fused dequant GEMM (weights stream packed HBM -> VMEM)
+  nxfp_quantize   Algorithm-1 MSE block quantizer (KV-cache / grad casts)
+  nxfp_attention  flash-decode over an NxFP-packed KV cache
+"""
+from .ops import decode_attention, qmatmul, quantize_qtensor
+
+__all__ = ["qmatmul", "quantize_qtensor", "decode_attention"]

@@ -1,0 +1,99 @@
+"""Arithmetic (LUT-free) NxFP field decode — shared by the Pallas kernels.
+
+TPU adaptation of the paper's Fig. 7 dequantization flow: GPU kernels would
+use a shared-memory lookup table; TPU gathers are slow on the VPU, so we
+decode sign/microexponent/mantissa fields with vector integer ops and build
+powers of two by assembling float32 exponent bits directly (exact, no
+transcendentals).
+
+All functions are pure jnp and usable both inside ``pl.pallas_call`` bodies
+and in plain XLA code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import BlockFormat, ELEMENT_FORMATS
+
+__all__ = ["pow2i", "decode_elem", "decode_scale", "decode_block_values",
+           "unpack_codes_pallas"]
+
+
+def pow2i(e):
+    """Exact 2**e for int32 e in [-126, 127] via exponent-bit assembly."""
+    e = jnp.clip(e, -126, 127).astype(jnp.int32)
+    return jax.lax.bitcast_convert_type((e + 127) << 23, jnp.float32)
+
+
+def decode_elem(codes, elem_name: str, cr: bool):
+    """Decode k-bit element codes (int32) to float32 values in scaled units.
+
+    Implements Fig. 7 steps 1-3 arithmetically: slice fields, remap the
+    recycled code (10...0 -> -(smallest)/2, one right-shift of the smallest
+    level), reconstruct the mantissa/exponent product.
+    """
+    fmt = ELEMENT_FORMATS[elem_name]
+    bits, ebits, mbits, bias = fmt.bits, fmt.ebits, fmt.mbits, fmt.bias
+    c = codes.astype(jnp.int32)
+    sign = (c >> (bits - 1)) & 1
+    mag = c & ((1 << (bits - 1)) - 1)
+    if fmt.is_bfp:
+        val = mag.astype(jnp.float32)
+        smallest = 1.0
+    else:
+        e = mag >> mbits
+        m = (mag & ((1 << mbits) - 1)).astype(jnp.float32) * (0.5 ** mbits)
+        sub = m * (2.0 ** (1 - bias))                       # e == 0: subnormal
+        nrm = (1.0 + m) * pow2i(e - bias)                   # e >= 1: normal
+        val = jnp.where(e == 0, sub, nrm)
+        if ebits == 4 and mbits == 3:  # e4m3 NaN code -> 0 (matches ref LUT)
+            val = jnp.where(mag == 127, 0.0, val)
+        smallest = 0.5 ** mbits * 2.0 ** (1 - bias)
+    val = jnp.where(sign == 1, -val, val)
+    if cr:  # code recycling: 10...0 would be -0; remap to -(smallest)/2
+        val = jnp.where(c == (1 << (bits - 1)),
+                        jnp.float32(-0.5 * smallest), val)
+    return val
+
+
+def decode_scale(meta):
+    """meta int32 (packed uint16 semantics) -> (scale f32, fmt_bit int32)."""
+    m = meta.astype(jnp.int32)
+    e_shared = (m & 0xFF) - 128
+    nano = (m >> 8) & 0x3
+    fmt_bit = (m >> 10) & 0x1
+    scale = (1.0 + nano.astype(jnp.float32) * 0.25) * pow2i(e_shared)
+    return scale, fmt_bit
+
+
+def decode_block_values(codes, meta, fmt: BlockFormat):
+    """codes (..., nb, B) int-like, meta (..., nb) -> f32 values (original units).
+
+    Mirrors ``repro.core.quantize.dequantize_blocks`` exactly (bit-identical:
+    level values and scales are exact in f32 in both paths).
+    """
+    scale, fmt_bit = decode_scale(meta)
+    vals = None
+    for fb, elem in fmt.elem_formats:
+        v = decode_elem(codes, elem.name, fmt.cr)
+        vals = v if vals is None else jnp.where(
+            (fmt_bit == fb)[..., None], v, vals)
+    return vals * scale[..., None]
+
+
+def unpack_codes_pallas(packed, bits: int):
+    """(..., nb, bpb) uint8 -> (..., nb, B) int32 codes. k in {4, 8} only.
+
+    Restricted to byte-aligned widths so the unpack is a pure vector op
+    (no gathers) inside Mosaic; 5/6-bit formats take the XLA path.
+    """
+    b = packed.astype(jnp.int32)
+    if bits == 8:
+        return b
+    if bits == 4:
+        lo = b & 0xF
+        hi = (b >> 4) & 0xF
+        out = jnp.stack([lo, hi], axis=-1)
+        return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+    raise NotImplementedError(f"pallas unpack supports 4/8-bit, got {bits}")

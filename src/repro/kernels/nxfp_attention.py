@@ -1,0 +1,118 @@
+"""Flash-decode attention over an NxFP-quantized KV cache (Pallas, TPU).
+
+One new query token attends to a long cached context whose K/V tensors are
+stored packed in NxFP (quantization blocks along head_dim, the qk^T
+contraction dim). Decode attention at 32k-500k context is *memory-bound*:
+wall time ~ KV bytes / HBM bandwidth, so streaming 4.34-bit codes instead of
+16-bit values is a direct ~3.7x cut of the dominant roofline term — this
+kernel is the paper's "smaller memory footprint" claim turned into serving
+bandwidth.
+
+Layout (from ``QTensor.quantize(k, fmt, axis=-1)`` per cache):
+  k_packed/v_packed: (B, S, KVH, NB, bpb) uint8    NB = head_dim/32
+  k_meta/v_meta:     (B, S, KVH, NB)      int32
+  q:                 (B, KVH, G, D)                G = q_heads / kv_heads
+  lengths:           (B, 1) int32                  valid cache length per seq
+
+Grid: (B, KVH, S/TS); the context axis is sequential with the classic
+online-softmax (m, l, acc) VMEM carry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import BlockFormat
+from .decode_lib import decode_block_values, unpack_codes_pallas
+
+__all__ = ["nxfp_decode_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _dequant_tile(p_ref, m_ref, fmt: BlockFormat):
+    """(1, TS, 1, NB, bpb) packed + (1, TS, 1, NB) meta -> (TS, D) f32."""
+    codes = unpack_codes_pallas(p_ref[0, :, 0], fmt.bits)   # (TS, NB, 32)
+    vals = decode_block_values(codes, m_ref[0, :, 0], fmt)  # (TS, NB, 32)
+    ts, nb, b = vals.shape
+    return vals.reshape(ts, nb * b)
+
+
+def _kernel(q_ref, kp_ref, km_ref, vp_ref, vm_ref, len_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, fmt: BlockFormat, tile_s: int):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                     # (G, D)
+    k = _dequant_tile(kp_ref, km_ref, fmt)                  # (TS, D)
+    scores = jax.lax.dot_general(                           # (G, TS)
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    pos = s_idx * tile_s + jax.lax.iota(jnp.int32, tile_s)
+    valid = pos < len_ref[0, 0]
+    scores = jnp.where(valid[None, :], scores, _NEG_INF)
+
+    m_old = m_scr[...]                                      # (G, 1)
+    m_new = jnp.maximum(m_old, jnp.max(scores, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_old - m_new)
+    p = jnp.exp(scores - m_new)                             # (G, TS)
+    p = jnp.where(valid[None, :], p, 0.0)
+
+    v = _dequant_tile(vp_ref, vm_ref, fmt)                  # (TS, D)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    m_scr[...] = m_new
+
+    @pl.when(s_idx == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "tile_s", "interpret"))
+def nxfp_decode_attention_pallas(q, k_packed, k_meta, v_packed, v_meta,
+                                 lengths, fmt: BlockFormat,
+                                 tile_s: int = 512, interpret: bool = False):
+    """Returns (B, KVH, G, D) f32 attention output (softmax scale on q)."""
+    b, kvh, g, d = q.shape
+    bb, s, kvh2, nb, bpb = k_packed.shape
+    assert (bb, kvh2) == (b, kvh) and nb * fmt.block_size == d
+    assert s % tile_s == 0, (s, tile_s)
+
+    grid = (b, kvh, s // tile_s)
+    kv_spec = pl.BlockSpec((1, tile_s, 1, nb, bpb),
+                           lambda i, j, k: (i, k, j, 0, 0))
+    meta_spec = pl.BlockSpec((1, tile_s, 1, nb),
+                             lambda i, j, k: (i, k, j, 0))
+    out = pl.pallas_call(
+        functools.partial(_kernel, fmt=fmt, tile_s=tile_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, j, k: (i, j, 0, 0)),
+            kv_spec, meta_spec, kv_spec, meta_spec,
+            pl.BlockSpec((1, 1), lambda i, j, k: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, j, k: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_packed, k_meta.astype(jnp.int32),
+      v_packed, v_meta.astype(jnp.int32), lengths.astype(jnp.int32))
+    return out

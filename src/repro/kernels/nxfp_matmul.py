@@ -1,0 +1,107 @@
+"""Fused on-the-fly NxFP dequantization GEMM (Pallas, TPU target).
+
+Computes ``y = x @ dequant(Wq)`` where ``Wq`` is an NxFP/MxFP/BFP-quantized
+weight stored *packed* in HBM. This is the paper's deployment kernel
+(Fig. 7): compressed codes stream HBM -> VMEM, fields are sliced and decoded
+arithmetically on the VPU, the NanoMantissa/shared-exponent scale is applied,
+the tile is padded to bf16, and the MAC runs on the MXU — so HBM traffic for
+weights is ~bits/16 of the bf16 baseline.
+
+Memory layout (produced by ``QTensor.quantize(w, fmt, axis=0)`` for a (K, N)
+weight):
+
+  packed: (N, KB, bpb) uint8   KB = K/32 blocks along the contraction dim,
+                               bpb = 4*bits bytes per 32-element block
+  meta:   (N, KB) uint16       (int32 when fed to the kernel)
+
+Tiling: grid (M/TM, N/TN, K/TK); TK a multiple of 32 so quantization blocks
+never straddle a VMEM tile. Default (128, 128, 512): x tile 128 KiB (bf16),
+packed tile TN*TK*bits/8 = 32 KiB at 4-bit, accumulator 64 KiB fp32 — well
+inside VMEM, MXU-aligned (128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import BlockFormat
+from .decode_lib import decode_scale, decode_elem, unpack_codes_pallas
+
+__all__ = ["nxfp_matmul_pallas"]
+
+
+def _decode_tile(p_ref, m_ref, fmt: BlockFormat):
+    """Dequantize one (TN, KB_t, bpb) packed tile to a bf16 (TN, TK) tile."""
+    codes = unpack_codes_pallas(p_ref[...], fmt.bits)       # (TN, KB_t, 32)
+    scale, fmt_bit = decode_scale(m_ref[...])               # (TN, KB_t)
+    vals = None
+    for fb, elem in fmt.elem_formats:
+        v = decode_elem(codes, elem.name, fmt.cr)
+        vals = v if vals is None else jnp.where(
+            (fmt_bit == fb)[..., None], v, vals)
+    w = vals * scale[..., None]                             # (TN, KB_t, 32)
+    tn, kb, b = w.shape
+    return w.reshape(tn, kb * b).astype(jnp.bfloat16)       # (TN, TK)
+
+
+def _kernel(x_ref, p_ref, m_ref, o_ref, acc_ref, *, fmt: BlockFormat):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _decode_tile(p_ref, m_ref, fmt)                     # (TN, TK) bf16
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "tile_m", "tile_n", "tile_k", "interpret",
+                     "out_dtype"))
+def nxfp_matmul_pallas(x, packed, meta, fmt: BlockFormat,
+                       tile_m: int = 128, tile_n: int = 128,
+                       tile_k: int = 512, interpret: bool = False,
+                       out_dtype=jnp.float32):
+    """x: (M, K) bf16/f32; packed: (N, KB, bpb) uint8; meta: (N, KB) u16/i32.
+
+    Returns (M, N) ``out_dtype``. M is padded internally; K and N must be
+    multiples of the chosen tiles (wrapper in ops.py adapts tile sizes).
+    """
+    m, k_dim = x.shape
+    n, kb, bpb = packed.shape
+    assert kb * fmt.block_size == k_dim, (packed.shape, x.shape)
+    assert bpb == fmt.bytes_per_block
+
+    pad_m = (-m) % tile_m
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    assert k_dim % tile_k == 0 and n % tile_n == 0, (x.shape, n, tile_k, tile_n)
+    kb_t = tile_k // fmt.block_size
+
+    grid = ((m + pad_m) // tile_m, n // tile_n, k_dim // tile_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, fmt=fmt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tile_n, kb_t, bpb), lambda i, j, k: (j, k, 0)),
+            pl.BlockSpec((tile_n, kb_t), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pad_m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tile_m, tile_n), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.bfloat16), packed, meta.astype(jnp.int32))
+    return out[:m]

@@ -1,0 +1,148 @@
+"""Public jit'd wrappers for the NxFP kernels with an impl switch.
+
+``impl``:
+  - "xla":    mathematically identical pure-jnp path (runs everywhere; used
+              by the 512-device dry-run and any non-TPU backend).
+  - "pallas": the TPU kernels (``interpret=True`` automatically on CPU so
+              tests exercise the real kernel bodies).
+  - None:     auto — pallas on TPU, xla elsewhere.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BlockFormat, get_format
+from repro.core.pack import pack_codes
+from repro.core.qtensor import QTensor
+from repro.core.quantize import quantize_blocks, to_blocks
+from . import ref as kref
+from .nxfp_attention import nxfp_decode_attention_pallas
+from .nxfp_matmul import nxfp_matmul_pallas
+from .nxfp_quantize import nxfp_quantize_pallas
+
+__all__ = ["qmatmul", "quantize_qtensor", "decode_attention"]
+
+# Weight-stationary serving (§Perf): pin matmul activations replicated so
+# GSPMD partial-sums over the weights' FSDP ('data') dim instead of
+# all-gathering multi-GB weight shards every decode step. Activations at
+# decode are tiny (B x d), weights are not.
+REPLICATED_ACT_MATMUL = False
+
+# Dot accumulation/partial-sum dtype (§Perf): bf16 halves the wire bytes of
+# every row-parallel all-reduce (the cross-shard sum runs in bf16; each
+# shard's MXU accumulation precision is unchanged on TPU). None = f32.
+PSUM_DTYPE = None
+
+
+def _resolve(impl: Optional[str]):
+    if impl is not None:
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pick_tile(dim: int, prefs=(512, 256, 128, 64, 32)) -> Optional[int]:
+    for t in prefs:
+        if dim % t == 0:
+            return t
+    return None
+
+
+def qmatmul(x, w, impl: Optional[str] = None):
+    """x (..., K) @ w, where w is a QTensor (quantized along axis 0 of (K, N))
+    or a plain dense array. Returns (..., N) f32."""
+    if not isinstance(w, QTensor):
+        return jax.lax.dot_general(
+            x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+            (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=PSUM_DTYPE or jnp.float32)
+    impl = _resolve(impl)
+    # derive dims from the children (aux .shape may be stale after scan
+    # slicing of stacked-layer weights); layout is (N, KB, bpb)
+    assert w.packed.ndim == 3, w.packed.shape
+    n = w.packed.shape[0]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if REPLICATED_ACT_MATMUL:
+        # batch dim replicated (so GSPMD partial-sums over the weights'
+        # 'data' shards instead of gathering them); feature dim left to the
+        # partitioner (keeps the d_ff hidden 'model'-sharded in MLPs).
+        from jax.sharding import PartitionSpec as P
+        x2 = jax.lax.with_sharding_constraint(
+            x2, P(None, P.UNCONSTRAINED))
+    kb = w.packed.shape[-2]
+    k_pad = kb * w.fmt.block_size
+    if x2.shape[-1] < k_pad:  # quantization padded K to a block multiple
+        x2 = jnp.pad(x2, ((0, 0), (0, k_pad - x2.shape[-1])))
+
+    if impl == "pallas" and w.fmt.bits in (4, 8):
+        tk = _pick_tile(k_pad)
+        tn = _pick_tile(n, (256, 128, 64, 32, 16, 8))
+        if tk and tn:
+            tm = _pick_tile(max(x2.shape[0], 1), (256, 128, 64, 32, 16, 8, 1))
+            y = nxfp_matmul_pallas(x2, w.packed, w.meta, w.fmt,
+                                   tile_m=tm or 8, tile_n=tn, tile_k=tk,
+                                   interpret=_interpret())
+            return y.reshape(*lead, n)
+    y = kref.qmatmul_ref(x2, w.packed, w.meta, w.fmt)
+    return y.reshape(*lead, n)
+
+
+def quantize_qtensor(x, fmt, axis: int = -1,
+                     impl: Optional[str] = None) -> QTensor:
+    """Quantize a dense array to a QTensor via the kernel or the reference."""
+    if isinstance(fmt, str):
+        fmt = get_format(fmt)
+    impl = _resolve(impl)
+    axis = axis if axis < 0 else axis - x.ndim
+    xb, orig = to_blocks(x, fmt.block_size, axis)
+    if impl == "pallas":
+        flat = xb.reshape(-1, fmt.block_size)
+        codes, meta = nxfp_quantize_pallas(flat.astype(jnp.float32), fmt,
+                                           interpret=_interpret())
+        codes = codes.reshape(xb.shape).astype(jnp.uint8)
+        meta = meta.reshape(xb.shape[:-1]).astype(jnp.uint16)
+    else:
+        codes, meta = quantize_blocks(xb, fmt)
+    return QTensor(pack_codes(codes, fmt.bits), meta, fmt.name,
+                   tuple(x.shape), axis, orig)
+
+
+def decode_attention(q, kq: QTensor, vq: QTensor, lengths, n_kv_heads: int,
+                     impl: Optional[str] = None):
+    """Single-token attention over a quantized KV cache.
+
+    q: (B, H, D) — unscaled query for the new token.
+    kq/vq: QTensor of the (B, S, KVH, D) cache, quantized along axis -1.
+    lengths: (B,) int32 valid context lengths.
+    Returns (B, H, D) f32.
+    """
+    impl = _resolve(impl)
+    b, h, d = q.shape
+    g = h // n_kv_heads
+    qg = (q.reshape(b, n_kv_heads, g, d).astype(jnp.float32) *
+          np.float32(1.0 / np.sqrt(d)))
+    lengths2 = lengths.reshape(b, 1).astype(jnp.int32)
+    fmt = kq.fmt
+    # quantization pads head_dim to a block multiple; pad q to match (the
+    # padded K dims dequantize to 0 so scores are unchanged) & slice out.
+    d_pad = kq.packed.shape[-2] * fmt.block_size
+    if d_pad != d:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, d_pad - d)))
+    if impl == "pallas" and fmt.bits in (4, 8):
+        s = kq.packed.shape[1]
+        ts = _pick_tile(s, (512, 256, 128, 64, 32, 16, 8, 1))
+        out = nxfp_decode_attention_pallas(
+            qg, kq.packed, kq.meta, vq.packed, vq.meta, lengths2, fmt,
+            tile_s=ts, interpret=_interpret())
+    else:
+        out = kref.decode_attention_ref(
+            qg, kq.packed, kq.meta, vq.packed, vq.meta, lengths2, fmt)
+    return out[..., :d].reshape(b, h, d)

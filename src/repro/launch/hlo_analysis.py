@@ -1,0 +1,212 @@
+"""Post-SPMD HLO analysis: loop-aware collective bytes and dot FLOPs.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless
+of trip count (verified empirically on this backend: a 2-layer and 4-layer
+scan report identical flops), so any roofline derived from it would be
+loop-blind. This module parses the compiled HLO text instead:
+
+  1. split the module into computations,
+  2. recover each while loop's trip count from its condition computation
+     (scans lower to `iter < constant(N)` conditions),
+  3. propagate multipliers down the call graph (while bodies, fusions,
+     calls, conditionals),
+  4. tally (a) collective operand bytes x ring wire factors and (b)
+     2 * prod(out_dims) * prod(contract_dims) for every dot,
+     each scaled by its computation's execution count.
+
+Everything here is text parsing of `lowered/compiled.as_text()` — the
+"profile" the dry-run methodology prescribes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+                "s4": 0.5, "u4": 0.5}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT )?%([\w.-]+) = ([^ ]+) ([a-z][\w-]*)\(")
+_COMP_HDR = re.compile(r"^(ENTRY )?%?([\w.-]+) \(.*\) -> .+ \{$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=%?([\w.-]+), body=%?([\w.-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+# ring-algorithm wire factors expressed against the op's RESULT bytes
+# (scheduled HLO prints operand *names* only; the result type is on the
+# defining line). result==operand for AR/A2A/CP; all-gather result is the
+# full gathered tensor; reduce-scatter result is one shard.
+WIRE_FACTORS = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / n,       # result = operand
+    "all-gather": lambda n: (n - 1) / n,             # result = n * shard
+    "reduce-scatter": lambda n: float(n - 1),        # result = operand / n
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+_COLL_RE = re.compile(
+    r"= *(\S+) (all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def split_computations(hlo: str) -> Tuple[Dict[str, str], str]:
+    """-> ({name: body_text}, entry_name)."""
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line.strip()) if line and line[0] != " " else None
+        if m or (line.startswith(("ENTRY", "%")) and line.rstrip().endswith("{")):
+            hdr = line.strip()
+            is_entry = hdr.startswith("ENTRY")
+            name = hdr.split("(", 1)[0].replace("ENTRY", "").strip()
+            name = name.lstrip("%").strip()
+            cur = name
+            comps[cur] = []
+            if is_entry:
+                entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return {k: "\n".join(v) for k, v in comps.items()}, entry or ""
+
+
+def _trip_count(cond_text: str) -> int:
+    consts = [int(c) for c in
+              re.findall(r"[su]32\[\] constant\((\d+)\)", cond_text)]
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(hlo: str) -> Tuple[Dict[str, float], Dict[str, str]]:
+    """Execution count per computation, propagated through the call graph."""
+    comps, entry = split_computations(hlo)
+    mult: Dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    while order:
+        name = order.pop(0)
+        text = comps.get(name, "")
+        m = mult.get(name, 1.0)
+
+        def visit(child: str, factor: float):
+            if child not in comps:
+                return
+            mult[child] = mult.get(child, 0.0) + m * factor
+            if child not in seen:
+                seen.add(child)
+                order.append(child)
+
+        for w in _WHILE_RE.finditer(text):
+            cond, body = w.group(1), w.group(2)
+            trips = _trip_count(comps.get(cond, ""))
+            visit(cond, trips + 1)
+            visit(body, trips)
+        for c in _CALLS_RE.finditer(text):
+            if c.group(1) not in [w.group(1) for w in
+                                  _WHILE_RE.finditer(text)]:
+                visit(c.group(1), 1.0)
+        for b in _BRANCH_RE.finditer(text):
+            for br in b.group(1).split(","):
+                visit(br.strip().lstrip("%"), 1.0)
+    return mult, comps
+
+
+def collective_stats(hlo: str, default_group: int) -> Dict[str, dict]:
+    """Loop-aware per-device collective bytes.
+
+    Returns {op: {count, executions, operand_bytes, wire_bytes}} where
+    `operand_bytes`/`wire_bytes` include loop trip multipliers.
+    """
+    mult, comps = computation_multipliers(hlo)
+    stats = {k: {"count": 0, "executions": 0.0, "result_bytes": 0.0,
+                 "wire_bytes": 0.0} for k in WIRE_FACTORS}
+    for cname, text in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for line in text.splitlines():
+            cm = _COLL_RE.search(line)
+            if not cm:
+                continue
+            rtype, op = cm.group(1), cm.group(2)
+            g = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+            gsize = len(g.group(1).split(",")) if g else default_group
+            gsize = max(gsize, 2)
+            rb = _shape_bytes(rtype)
+            stats[op]["count"] += 1
+            stats[op]["executions"] += m
+            stats[op]["result_bytes"] = stats[op].get("result_bytes", 0.0) \
+                + rb * m
+            stats[op]["wire_bytes"] += rb * m * WIRE_FACTORS[op](gsize)
+    return stats
+
+
+def dot_flops(hlo: str) -> float:
+    """Loop-aware total dot FLOPs of the per-device SPMD program."""
+    mult, comps = computation_multipliers(hlo)
+    total = 0.0
+    for cname, text in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        shapes: Dict[str, List[int]] = {}
+        for line in text.splitlines():
+            d = _DEF_RE.match(line)
+            if d:
+                shapes[d.group(1)] = _shape_dims(d.group(2))
+        for line in text.splitlines():
+            if " dot(" not in line:
+                continue
+            d = _DEF_RE.match(line)
+            if not d or d.group(3) != "dot":
+                continue
+            out_dims = _shape_dims(d.group(2))
+            args = line.split(" dot(", 1)[1]
+            lhs_name = args.split(",", 1)[0].strip().lstrip("%")
+            lc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            lhs_shape = shapes.get(lhs_name, [])
+            contract = 1
+            if lc and lc.group(1) and lhs_shape:
+                for i in lc.group(1).split(","):
+                    idx = int(i)
+                    if idx < len(lhs_shape):
+                        contract *= lhs_shape[idx]
+            total += 2.0 * float(np.prod(out_dims or [1])) * contract * m
+    return total
+
+
+def while_trip_counts(hlo: str) -> List[int]:
+    comps, _ = split_computations(hlo)
+    out = []
+    for text in comps.values():
+        for w in _WHILE_RE.finditer(text):
+            out.append(_trip_count(comps.get(w.group(1), "")))
+    return out

@@ -1,0 +1,194 @@
+"""Per-family transformer layers: full-sequence (train/prefill) and decode.
+
+Every layer body is written to be consumed by ``lax.scan`` over a stacked
+parameter pytree, in both directions:
+
+  layer_forward(cfg, p, x, positions, ...)   -> (x, per-layer cache entries)
+  layer_decode(cfg, p, x, layer_cache, pos)  -> (x, new layer_cache)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attend_chunked, cross_attention, gqa_project,
+                        memory_kv, self_attention)
+from .common import (ModelConfig, apply_rope, dense, init_attn, init_mlp,
+                     ninit, rmsnorm, rope_freqs, split_keys, swiglu)
+from .kvcache import attend_decode, write_token
+from .moe import init_moe, moe_ffn
+from .ssm import init_mamba, mamba_block, mamba_step
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init (one layer; stacked via vmap in lm.py)
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, kind: str) -> Params:
+    """kind: dense | moe | ssm | hybrid | cross | encdec."""
+    d = cfg.d_model
+    k = split_keys(key, ["attn", "ffn", "ssm", "cross"])
+    p: Params = {"ln1_scale": jnp.ones((d,), jnp.float32)}
+    if kind == "ssm":
+        p.update(init_mamba(k["ssm"], cfg))
+        return p
+    if kind == "cross":
+        p.update({f"cross_{n}": v for n, v in
+                  init_attn(k["cross"], cfg).items()})
+        p.update(init_mlp(k["ffn"], d, cfg.d_ff, cfg.n_layers))
+        p["ln2_scale"] = jnp.ones((d,), jnp.float32)
+        return p
+    p.update(init_attn(k["attn"], cfg))
+    p["ln2_scale"] = jnp.ones((d,), jnp.float32)
+    if kind == "moe":
+        p.update(init_moe(k["ffn"], cfg))
+    elif kind == "hybrid":
+        p.update(init_mamba(k["ssm"], cfg))
+        p.update(init_mlp(k["ffn"], d, cfg.d_ff, cfg.n_layers))
+    elif kind == "encdec":
+        p.update({f"cross_{n}": v for n, v in
+                  init_attn(k["cross"], cfg).items()})
+        p["ln3_scale"] = jnp.ones((d,), jnp.float32)
+        p.update(init_mlp(k["ffn"], d, cfg.d_ff, cfg.n_layers))
+    else:
+        p.update(init_mlp(k["ffn"], d, cfg.d_ff, cfg.n_layers))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# full-sequence bodies (training / prefill)
+# ---------------------------------------------------------------------------
+
+def layer_forward(cfg: ModelConfig, p: Params, x, positions, kind: str,
+                  *, causal: bool = True, mem=None, ssm_state=None,
+                  conv_state=None, chunk: int = 1024):
+    """Returns (x, dict of per-layer outputs for caching/aux)."""
+    from repro.sharding.ctx import constrain_act
+    x = constrain_act(x)  # keep the residual stream batch-data sharded
+    out: Dict[str, Any] = {}
+    h = rmsnorm(x, p["ln1_scale"], cfg.norm_eps)
+
+    if kind == "ssm":
+        y, hf, conv = mamba_block(cfg, p, h, h0=ssm_state, conv0=conv_state)
+        out.update(ssm_h=hf, ssm_conv=conv)
+        return x + y, out
+
+    if kind == "cross":
+        y = cross_attention(cfg, p, h, *mem)
+        x = x + y
+        h2 = rmsnorm(x, p["ln2_scale"], cfg.norm_eps)
+        return x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"]), out
+
+    if kind == "hybrid":
+        attn_y, kk, vv = self_attention(cfg, p, h, positions, causal=causal,
+                                        window=cfg.sliding_window,
+                                        chunk=chunk)
+        ssm_y, hf, conv = mamba_block(cfg, p, h, h0=ssm_state,
+                                      conv0=conv_state)
+        out.update(k=kk, v=vv, ssm_h=hf, ssm_conv=conv)
+        x = x + 0.5 * (attn_y + ssm_y)
+        h2 = rmsnorm(x, p["ln2_scale"], cfg.norm_eps)
+        return x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"]), out
+
+    # dense / moe / encdec
+    y, kk, vv = self_attention(cfg, p, h, positions, causal=causal,
+                               window=cfg.sliding_window, chunk=chunk)
+    out.update(k=kk, v=vv)
+    x = x + y
+    if kind == "encdec":
+        h3 = rmsnorm(x, p["ln3_scale"], cfg.norm_eps)
+        x = x + cross_attention(cfg, p, h3, *mem)
+    h2 = rmsnorm(x, p["ln2_scale"], cfg.norm_eps)
+    if kind == "moe":
+        y2, aux = moe_ffn(cfg, p, h2)
+        out["moe_aux"] = aux
+        return x + y2, out
+    return x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"]), out
+
+
+# ---------------------------------------------------------------------------
+# decode bodies (one token, cached)
+# ---------------------------------------------------------------------------
+
+def _attn_decode(cfg: ModelConfig, p: Params, h, layer_cache, pos,
+                 kv_fmt: Optional[str], prefix: str = ""):
+    """h (B, 1, D) -> (attn out (B, 1, D), new attn cache entries)."""
+    b = h.shape[0]
+    q, k1, v1 = gqa_project(cfg, p, h, prefix)
+    positions = jnp.reshape(pos, (1,))
+    cos, sin = rope_freqs(positions, cfg.hd, cfg.rope_theta)
+    q = apply_rope(q.reshape(b, 1, -1, cfg.hd), cos, sin).reshape(q.shape)
+    k1 = apply_rope(k1, cos, sin)
+    new_cache = write_token(cfg, layer_cache, k1.astype(jnp.float32),
+                            v1.astype(jnp.float32), pos, kv_fmt)
+    qh = q.reshape(b, cfg.n_heads, cfg.hd)
+    o = attend_decode(cfg, new_cache, qh, pos, kv_fmt)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.hd).astype(h.dtype)
+    return dense(o, p[f"{prefix}wo"]), new_cache
+
+
+def _cross_decode(cfg: ModelConfig, p: Params, h, mem_k, mem_v):
+    """Single-token cross attention against cached memory (B, S, KVH, hd)."""
+    b = h.shape[0]
+    hd, hh, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = dense(h, p["cross_wq"]).reshape(b, kvh, hh // kvh, hd)
+    q = q.astype(jnp.float32) * (hd ** -0.5)
+    scores = jnp.einsum("bhgd,bshd->bhgs", q, mem_k.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    pp = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", pp, mem_v.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, hh * hd).astype(h.dtype)
+    return dense(o, p["cross_wo"])
+
+
+def layer_decode(cfg: ModelConfig, p: Params, x, layer_cache, pos,
+                 kind: str, kv_fmt: Optional[str]):
+    """x (B, 1, D) -> (x, new layer_cache)."""
+    new_cache = dict(layer_cache) if layer_cache else {}
+    h = rmsnorm(x, p["ln1_scale"], cfg.norm_eps)
+
+    if kind == "ssm":
+        y, hf, conv = mamba_step(cfg, p, h, layer_cache["h"],
+                                 layer_cache["conv"])
+        new_cache.update(h=hf, conv=conv)
+        return x + y, new_cache
+
+    if kind == "cross":
+        y = _cross_decode(cfg, p, h, layer_cache["mem_k"],
+                          layer_cache["mem_v"])
+        x = x + y
+        h2 = rmsnorm(x, p["ln2_scale"], cfg.norm_eps)
+        return x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"]), new_cache
+
+    if kind == "hybrid":
+        attn_cache = {n: layer_cache[n] for n in layer_cache
+                      if not n.startswith(("h", "conv"))}
+        attn_y, attn_new = _attn_decode(cfg, p, h, attn_cache, pos, kv_fmt)
+        ssm_y, hf, conv = mamba_step(cfg, p, h, layer_cache["h"],
+                                     layer_cache["conv"])
+        new_cache.update(attn_new)
+        new_cache.update(h=hf, conv=conv)
+        x = x + 0.5 * (attn_y + ssm_y)
+        h2 = rmsnorm(x, p["ln2_scale"], cfg.norm_eps)
+        return x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"]), new_cache
+
+    attn_cache = {n: layer_cache[n] for n in layer_cache
+                  if not n.startswith("mem_")}
+    y, attn_new = _attn_decode(cfg, p, h, attn_cache, pos, kv_fmt)
+    new_cache.update(attn_new)
+    x = x + y
+    if kind == "encdec":
+        h3 = rmsnorm(x, p["ln3_scale"], cfg.norm_eps)
+        x = x + _cross_decode(cfg, p, h3, layer_cache["mem_k"],
+                              layer_cache["mem_v"])
+    h2 = rmsnorm(x, p["ln2_scale"], cfg.norm_eps)
+    if kind == "moe":
+        y2, _ = moe_ffn(cfg, p, h2)
+        return x + y2, new_cache
+    return x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"]), new_cache

@@ -1,0 +1,200 @@
+"""Shared model machinery: config, init helpers, norms, rotary, dense layer.
+
+Pure JAX: parameters are nested dicts of jnp arrays (or QTensor after
+direct-cast); every layer is a function (cfg, params, x, ...) -> y. Layers
+of a stack share one set of *stacked* parameters (leading L axis) consumed
+by ``jax.lax.scan`` so the lowered HLO is depth-independent — essential for
+compiling 126-layer models against 512 fake devices on one CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import QTensor
+from repro.kernels.ops import qmatmul
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config covers all ten assigned architecture families."""
+
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    sliding_window: Optional[int] = None   # SWA window (danube, hymba)
+    # --- MoE ---
+    n_experts: int = 0
+    n_experts_active: int = 0
+    n_experts_padded: int = 0      # EP padding (dead experts); 0 = n_experts
+    n_shared_experts: int = 0
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    # --- SSM (mamba-1) ---
+    ssm_state: int = 0
+    d_inner: int = 0               # 0 -> 2 * d_model
+    dt_rank: int = 0               # 0 -> ceil(d_model / 16)
+    conv_width: int = 4
+    ssm_chunk: int = 256
+    # --- VLM ---
+    cross_attn_every: int = 0      # every k-th layer is cross-attention
+    n_vision_tokens: int = 0
+    # --- encoder-decoder (whisper) ---
+    n_enc_layers: int = 0
+    n_audio_frames: int = 0
+    # --- numerics / training ---
+    dtype: Any = jnp.bfloat16
+    remat: bool = True             # activation checkpointing per layer
+    kv_sim_fmt: Optional[str] = None  # fake-quant K/V in batched forward
+                                      # (simulates quantized-KV inference)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def dinner(self) -> int:
+        return self.d_inner or 2 * self.d_model
+
+    @property
+    def dtrank(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch serve 500k contexts? (SSM / hybrid / windowed.)"""
+        return self.family in ("ssm", "hybrid") or self.sliding_window is not None
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings included)."""
+        d, ff, v, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        hd, h, kvh = self.hd, self.n_heads, self.n_kv_heads
+        attn = d * hd * h + 2 * d * hd * kvh + hd * h * d
+        mlp = 3 * d * ff
+        per_layer = 0
+        if self.family == "ssm":
+            di, n, dr = self.dinner, self.ssm_state, self.dtrank
+            per_layer = (d * 2 * di + di * (dr + 2 * n) + dr * di +
+                         di * self.conv_width + di * n + 2 * di + di * d)
+        elif self.family == "moe":
+            rout = self.n_experts * 3 * d * self.d_ff
+            shar = 3 * d * self.shared_d_ff if self.shared_d_ff else 0
+            per_layer = attn + rout + shar + d * self.n_experts
+        elif self.family == "hybrid":
+            di, n, dr = self.dinner, self.ssm_state, self.dtrank
+            mamba = (d * 2 * di + di * (dr + 2 * n) + dr * di +
+                     di * self.conv_width + di * n + 2 * di + di * d)
+            per_layer = attn + mamba + mlp
+        else:
+            per_layer = attn + mlp
+        total = L * per_layer + 2 * v * d
+        if self.family == "vlm" and self.cross_attn_every:
+            total += (L // self.cross_attn_every) * attn
+        if self.n_enc_layers:
+            total += self.n_enc_layers * (attn + mlp)
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: routed top-k + shared only)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        hd, h, kvh = self.hd, self.n_heads, self.n_kv_heads
+        attn = d * hd * h + 2 * d * hd * kvh + hd * h * d
+        act = (self.n_experts_active * 3 * d * self.d_ff +
+               (3 * d * self.shared_d_ff if self.shared_d_ff else 0))
+        return L * (attn + act + d * self.n_experts) + 2 * self.vocab * d
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def ninit(key, shape, scale: float = 0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key, names):
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+# ---------------------------------------------------------------------------
+# primitive layers
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def dense(x, w, out_dtype=None):
+    """Matmul against a dense or quantized (QTensor, axis=-2) weight."""
+    y = qmatmul(x, w)
+    return y.astype(out_dtype or x.dtype)
+
+
+def rope_freqs(positions, head_dim: int, theta: float):
+    """positions (...,) int32 -> (cos, sin) each (..., head_dim//2) f32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., T, H, D); cos/sin (..., T, D//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def swiglu(x, w1, w3, w2):
+    """SwiGLU MLP: (x W1 . silu) * (x W3) W2."""
+    h = jax.nn.silu(dense(x, w1).astype(jnp.float32)) * dense(x, w3).astype(
+        jnp.float32)
+    return dense(h.astype(x.dtype), w2)
+
+
+def init_mlp(key, d: int, ff: int, n_layers: int):
+    k = split_keys(key, ["w1", "w3", "w2"])
+    out_scale = 0.02 / math.sqrt(2 * n_layers)
+    return {
+        "mlp_w1": ninit(k["w1"], (d, ff)),
+        "mlp_w3": ninit(k["w3"], (d, ff)),
+        "mlp_w2": ninit(k["w2"], (ff, d), scale=out_scale),
+    }
+
+
+def init_attn(key, cfg: ModelConfig, prefix: str = ""):
+    d, hd, h, kvh = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    k = split_keys(key, ["q", "k", "v", "o"])
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    return {
+        f"{prefix}wq": ninit(k["q"], (d, h * hd)),
+        f"{prefix}wk": ninit(k["k"], (d, kvh * hd)),
+        f"{prefix}wv": ninit(k["v"], (d, kvh * hd)),
+        f"{prefix}wo": ninit(k["o"], (h * hd, d), scale=out_scale),
+    }

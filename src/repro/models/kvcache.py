@@ -1,0 +1,137 @@
+"""KV / SSM-state caches: dense bf16 or NxFP-packed, with SWA ring buffers.
+
+The quantized cache is the paper's "weights AND KV cache" configuration
+(§7.1): K/V rows are direct-cast per token (blocks along head_dim) into
+packed byte buffers; decode attention dequantizes tiles on the fly
+(Pallas kernel on TPU, identical jnp path elsewhere).
+
+Cache pytrees hold a leading stacked-layer axis consumed by lax.scan.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import get_format
+from repro.core.pack import bytes_per_block
+from repro.core.qtensor import QTensor
+from repro.kernels.ops import decode_attention, quantize_qtensor
+from .common import ModelConfig
+
+
+def attn_cache_init(cfg: ModelConfig, n_layers: int, batch: int,
+                    max_len: int, kv_fmt: Optional[str]):
+    """Allocate a stacked (L-leading) attention cache."""
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    # windowed caches are always window-sized rings (slot = pos % window)
+    s = cfg.sliding_window if cfg.sliding_window else max_len
+    if kv_fmt is None:
+        z = jnp.zeros((n_layers, batch, s, kvh, hd), cfg.dtype)
+        return {"k": z, "v": z}
+    fmt = get_format(kv_fmt)
+    nb = -(-hd // fmt.block_size)
+    bpb = bytes_per_block(fmt.block_size, fmt.bits)
+    zc = jnp.zeros((n_layers, batch, s, kvh, nb, bpb), jnp.uint8)
+    zm = jnp.zeros((n_layers, batch, s, kvh, nb), jnp.uint16)
+    return {"k_packed": zc, "k_meta": zm, "v_packed": zc, "v_meta": zm}
+
+
+def ssm_cache_init(cfg: ModelConfig, n_layers: int, batch: int):
+    di, n, cw = cfg.dinner, cfg.ssm_state, cfg.conv_width
+    return {"h": jnp.zeros((n_layers, batch, di, n), jnp.float32),
+            "conv": jnp.zeros((n_layers, batch, cw - 1, di), jnp.float32)}
+
+
+def _quantize_kv(x, kv_fmt: str):
+    """(B, T, KVH, hd) -> (packed, meta) along head_dim blocks."""
+    qt = quantize_qtensor(x, kv_fmt, axis=-1)
+    return qt.packed, qt.meta
+
+
+def _ring_place(x, window: int, t: int):
+    """Store the last `window` of x (B, T, ...) at ring slots (pos % window)."""
+    if t <= window:
+        pad = window - t
+        return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    tail = jax.lax.dynamic_slice_in_dim(x, t - window, window, axis=1)
+    return jnp.roll(tail, t % window, axis=1)
+
+
+def write_prefill(cfg: ModelConfig, k, v, kv_fmt: Optional[str],
+                  max_len: int):
+    """Build one layer's cache from full prefill K/V (B, T, KVH, hd)."""
+    t = k.shape[1]
+    w = cfg.sliding_window
+    s_total = w if w else max_len
+
+    def place(x):
+        if w:
+            return _ring_place(x, w, t)
+        pad = s_total - x.shape[1]
+        return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+
+    if kv_fmt is None:
+        return {"k": place(k.astype(cfg.dtype)), "v": place(v.astype(cfg.dtype))}
+    kp, km = _quantize_kv(k, kv_fmt)
+    vp, vm = _quantize_kv(v, kv_fmt)
+    return {"k_packed": place(kp), "k_meta": place(km),
+            "v_packed": place(vp), "v_meta": place(vm)}
+
+
+def write_token(cfg: ModelConfig, layer_cache, k1, v1, pos,
+                kv_fmt: Optional[str]):
+    """Insert one token's K/V (B, 1, KVH, hd) at position `pos` (traced)."""
+    w = cfg.sliding_window
+    slot = (pos % w) if w else pos
+
+    def upd(buf, val):
+        idx = (0, slot) + (0,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype), idx)
+
+    if kv_fmt is None:
+        return {"k": upd(layer_cache["k"], k1),
+                "v": upd(layer_cache["v"], v1)}
+    kp, km = _quantize_kv(k1, kv_fmt)
+    vp, vm = _quantize_kv(v1, kv_fmt)
+    return {"k_packed": upd(layer_cache["k_packed"], kp),
+            "k_meta": upd(layer_cache["k_meta"], km),
+            "v_packed": upd(layer_cache["v_packed"], vp),
+            "v_meta": upd(layer_cache["v_meta"], vm)}
+
+
+def attend_decode(cfg: ModelConfig, layer_cache, q, pos,
+                  kv_fmt: Optional[str]):
+    """q (B, H, hd) attends to one layer's cache; pos = current position.
+
+    Returns (B, H, hd) f32.
+    """
+    b, h, hd = q.shape
+    kvh = cfg.n_kv_heads
+    w = cfg.sliding_window
+    length = jnp.minimum(pos + 1, w) if w else pos + 1
+    lengths = jnp.full((b,), length, jnp.int32)
+
+    if kv_fmt is not None:
+        fmt = get_format(kv_fmt)
+        s = layer_cache["k_packed"].shape[1]
+        shape = (b, s, kvh, hd)
+        kq = QTensor(layer_cache["k_packed"], layer_cache["k_meta"],
+                     fmt.name, shape, -1, hd)
+        vq = QTensor(layer_cache["v_packed"], layer_cache["v_meta"],
+                     fmt.name, shape, -1, hd)
+        return decode_attention(q, kq, vq, lengths, kvh)
+
+    k, v = layer_cache["k"], layer_cache["v"]                  # (B,S,KVH,hd)
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd).astype(jnp.float32) * (hd ** -0.5)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    s = k.shape[1]
+    valid = jnp.arange(s)[None, :] < lengths[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, h, hd)

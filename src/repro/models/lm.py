@@ -1,0 +1,316 @@
+"""Model assembly: init / train forward / prefill / decode for all families.
+
+All stacks run under ``lax.scan`` over stacked layer parameters (QTensor
+leaves slice correctly — see core.qtensor), keeping the HLO size
+depth-independent. The VLM interleave (cross-attention every k-th layer)
+scans over *groups* of (k-1 self + 1 cross) layers; whisper runs an encoder
+stack followed by a decoder stack with per-layer cross attention.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import memory_kv
+from .blocks import init_layer, layer_decode, layer_forward
+from .common import ModelConfig, dense, ninit, rmsnorm, split_keys
+from .kvcache import ssm_cache_init, write_prefill
+
+Params = Dict[str, Any]
+
+_KIND = {"dense": "dense", "moe": "moe", "ssm": "ssm", "hybrid": "hybrid"}
+
+
+def _stack_init(key, cfg: ModelConfig, kind: str, n: int):
+    return jax.vmap(lambda k: init_layer(k, cfg, kind))(
+        jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ks = split_keys(key, ["embed", "head", "layers", "enc", "cross", "pos"])
+    p: Params = {
+        "tok_embed": ninit(ks["embed"], (cfg.vocab, cfg.d_model)),
+        "final_scale": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": ninit(ks["head"], (cfg.d_model, cfg.vocab)),
+    }
+    fam = cfg.family
+    if fam in _KIND:
+        p["layers"] = _stack_init(ks["layers"], cfg, _KIND[fam], cfg.n_layers)
+    elif fam == "vlm":
+        every = cfg.cross_attn_every
+        assert cfg.n_layers % every == 0, (cfg.n_layers, every)
+        groups = cfg.n_layers // every
+        self_stack = _stack_init(ks["layers"], cfg, "dense",
+                                 groups * (every - 1))
+        p["self_layers"] = jax.tree.map(
+            lambda l: l.reshape(groups, every - 1, *l.shape[1:]), self_stack)
+        p["cross_layers"] = _stack_init(ks["cross"], cfg, "cross", groups)
+    elif fam == "audio":
+        p["enc_layers"] = _stack_init(ks["enc"], cfg, "dense",
+                                      cfg.n_enc_layers)
+        p["layers"] = _stack_init(ks["layers"], cfg, "encdec", cfg.n_layers)
+        p["enc_pos_embed"] = ninit(ks["pos"], (cfg.n_audio_frames,
+                                               cfg.d_model))
+        p["enc_scale"] = jnp.ones((cfg.d_model,), jnp.float32)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+def _embed(cfg: ModelConfig, params: Params, tokens):
+    emb = params["tok_embed"]
+    if hasattr(emb, "dequantize"):  # QTensor embedding (policy-dependent)
+        emb = emb.dequantize(cfg.dtype)
+    return jnp.take(emb, tokens, axis=0).astype(cfg.dtype)
+
+
+def _head(cfg: ModelConfig, params: Params, x):
+    x = rmsnorm(x, params["final_scale"], cfg.norm_eps)
+    return dense(x, params["lm_head"], out_dtype=jnp.float32)
+
+
+def _encode_audio(cfg: ModelConfig, params: Params, frames):
+    """Stub-frontend encoder: frames (B, S_enc, D) are precomputed embeddings."""
+    s = frames.shape[1]
+    pos = params["enc_pos_embed"]
+    if hasattr(pos, "dequantize"):
+        pos = pos.dequantize(jnp.float32)
+    x = (frames.astype(jnp.float32) + pos[None, :s]).astype(cfg.dtype)
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(h, lp):
+        h, _ = layer_forward(cfg, lp, h, positions, "dense", causal=False)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rmsnorm(x, params["enc_scale"], cfg.norm_eps)
+
+
+def forward_train(cfg: ModelConfig, params: Params, batch: Dict[str, Any]
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """batch: tokens (B, T) [+ frames / vision]. Returns (logits f32, aux)."""
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    x = _embed(cfg, params, tokens)
+    positions = jnp.arange(t, dtype=jnp.int32)
+    aux0 = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    ckpt = jax.checkpoint if cfg.remat else (lambda f: f)
+
+    if fam in _KIND:
+        @ckpt
+        def body(carry, lp):
+            h, aux = carry
+            h, out = layer_forward(cfg, lp, h, positions, _KIND[fam])
+            return (h, aux + out.get("moe_aux", 0.0)), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["layers"])
+        return _head(cfg, params, x), aux
+
+    if fam == "vlm":
+        vision = batch["vision"]
+
+        @ckpt
+        def group(h, lps):
+            lp_self, lp_cross = lps
+
+            def inner(hh, lp):
+                hh, _ = layer_forward(cfg, lp, hh, positions, "dense")
+                return hh, None
+
+            h, _ = jax.lax.scan(inner, h, lp_self)
+            mem = memory_kv(cfg, lp_cross, vision.astype(cfg.dtype))
+            h, _ = layer_forward(cfg, lp_cross, h, positions, "cross",
+                                 mem=mem)
+            return h, None
+
+        x, _ = jax.lax.scan(group, x,
+                            (params["self_layers"], params["cross_layers"]))
+        return _head(cfg, params, x), aux0
+
+    if fam == "audio":
+        enc = _encode_audio(cfg, params, batch["frames"])
+
+        @ckpt
+        def body(h, lp):
+            mem = memory_kv(cfg, lp, enc)
+            h, _ = layer_forward(cfg, lp, h, positions, "encdec", mem=mem)
+            return h, None
+
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return _head(cfg, params, x), aux0
+
+    raise ValueError(fam)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+            aux_weight: float = 0.01):
+    logits, aux = forward_train(cfg, params, batch)
+    targets = batch["tokens"][:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask")
+    if mask is not None:
+        m = mask[:, 1:].astype(jnp.float32)
+        loss = jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    else:
+        loss = jnp.mean(nll)
+    return loss + aux_weight * aux, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+            max_len: int, kv_fmt: Optional[str]
+            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Run the full prompt, build the cache. Returns (last logits (B,V), cache)."""
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    x = _embed(cfg, params, tokens)
+    positions = jnp.arange(t, dtype=jnp.int32)
+    fam = cfg.family
+    cache: Dict[str, Any] = {"pos": jnp.asarray(t, jnp.int32)}
+
+    def attn_entries(out):
+        return write_prefill(cfg, out["k"], out["v"], kv_fmt, max_len)
+
+    if fam in _KIND:
+        kind = _KIND[fam]
+
+        def body(h, lp):
+            h, out = layer_forward(cfg, lp, h, positions, kind)
+            entries = {}
+            if "k" in out:
+                entries.update(attn_entries(out))
+            if "ssm_h" in out:
+                entries.update(h=out["ssm_h"], conv=out["ssm_conv"])
+            return h, entries
+
+        x, layer_caches = jax.lax.scan(body, x, params["layers"])
+        cache["layers"] = layer_caches
+    elif fam == "vlm":
+        vision = batch["vision"].astype(cfg.dtype)
+
+        def group(h, lps):
+            lp_self, lp_cross = lps
+
+            def inner(hh, lp):
+                hh, out = layer_forward(cfg, lp, hh, positions, "dense")
+                return hh, attn_entries(out)
+
+            h, self_cache = jax.lax.scan(inner, h, lp_self)
+            mem_k, mem_v = memory_kv(cfg, lp_cross, vision)
+            h, _ = layer_forward(cfg, lp_cross, h, positions, "cross",
+                                 mem=(mem_k, mem_v))
+            return h, (self_cache, {"mem_k": mem_k, "mem_v": mem_v})
+
+        x, (self_caches, cross_caches) = jax.lax.scan(
+            group, x, (params["self_layers"], params["cross_layers"]))
+        cache["self_layers"] = self_caches
+        cache["cross_layers"] = cross_caches
+    elif fam == "audio":
+        enc = _encode_audio(cfg, params, batch["frames"])
+
+        def body(h, lp):
+            mem_k, mem_v = memory_kv(cfg, lp, enc)
+            h, out = layer_forward(cfg, lp, h, positions, "encdec",
+                                   mem=(mem_k, mem_v))
+            entries = attn_entries(out)
+            entries.update(mem_k=mem_k, mem_v=mem_v)
+            return h, entries
+
+        x, layer_caches = jax.lax.scan(body, x, params["layers"])
+        cache["layers"] = layer_caches
+    else:
+        raise ValueError(fam)
+
+    logits = _head(cfg, params, x[:, -1:])
+    return logits[:, 0], cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens, cache,
+                kv_fmt: Optional[str]) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens (B, 1); cache from prefill. Returns (logits (B, V), new cache)."""
+    pos = cache["pos"]
+    x = _embed(cfg, params, tokens)
+    fam = cfg.family
+    new_cache: Dict[str, Any] = {"pos": pos + 1}
+
+    if fam in _KIND or fam == "audio":
+        kind = _KIND.get(fam, "encdec")
+
+        def body(h, xs):
+            lp, lc = xs
+            h, nc = layer_decode(cfg, lp, h, lc, pos, kind, kv_fmt)
+            return h, nc
+
+        x, layer_caches = jax.lax.scan(
+            body, x, (params["layers"], cache["layers"]))
+        new_cache["layers"] = layer_caches
+    elif fam == "vlm":
+        def group(h, xs):
+            (lp_self, lc_self), (lp_cross, lc_cross) = xs
+
+            def inner(hh, ys):
+                lp, lc = ys
+                hh, nc = layer_decode(cfg, lp, hh, lc, pos, "dense", kv_fmt)
+                return hh, nc
+
+            h, self_new = jax.lax.scan(inner, h, (lp_self, lc_self))
+            h, cross_new = layer_decode(cfg, lp_cross, h, lc_cross, pos,
+                                        "cross", kv_fmt)
+            return h, (self_new, cross_new)
+
+        x, (self_caches, cross_caches) = jax.lax.scan(
+            group, x, ((params["self_layers"], cache["self_layers"]),
+                       (params["cross_layers"], cache["cross_layers"])))
+        new_cache["self_layers"] = self_caches
+        new_cache["cross_layers"] = cross_caches
+    else:
+        raise ValueError(fam)
+
+    logits = _head(cfg, params, x)
+    return logits[:, 0], new_cache
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                     kv_fmt: Optional[str]):
+    """Abstract cache (ShapeDtypeStructs) for decode-only dry-run lowering."""
+    from .kvcache import attn_cache_init
+
+    def build():
+        cache: Dict[str, Any] = {"pos": jnp.asarray(max_len - 1, jnp.int32)}
+        fam, L = cfg.family, cfg.n_layers
+        if fam in _KIND:
+            entries = {}
+            if fam != "ssm":
+                entries.update(attn_cache_init(cfg, L, batch, max_len, kv_fmt))
+            if fam in ("ssm", "hybrid"):
+                entries.update(ssm_cache_init(cfg, L, batch))
+            cache["layers"] = entries
+        elif fam == "vlm":
+            every = cfg.cross_attn_every
+            groups = L // every
+            self_c = attn_cache_init(cfg, groups * (every - 1), batch,
+                                     max_len, kv_fmt)
+            cache["self_layers"] = jax.tree.map(
+                lambda l: l.reshape(groups, every - 1, *l.shape[1:]), self_c)
+            s_vis = cfg.n_vision_tokens
+            mem = jnp.zeros((groups, batch, s_vis, cfg.n_kv_heads, cfg.hd),
+                            cfg.dtype)
+            cache["cross_layers"] = {"mem_k": mem, "mem_v": mem}
+        elif fam == "audio":
+            entries = attn_cache_init(cfg, L, batch, max_len, kv_fmt)
+            s_enc = cfg.n_audio_frames
+            mem = jnp.zeros((L, batch, s_enc, cfg.n_kv_heads, cfg.hd),
+                            cfg.dtype)
+            entries.update(mem_k=mem, mem_v=mem)
+            cache["layers"] = entries
+        return cache
+
+    return jax.eval_shape(build)

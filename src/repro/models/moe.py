@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity dispatch, EP-shardable.
+
+Dispatch is the scatter->batched-einsum->gather scheme (no (T, E, C) one-hot
+dispatch tensors, which do not fit at 1M-token batches): tokens are assigned
+a per-expert slot via a cumulative count, dropped beyond capacity, scattered
+into an (E, C, D) buffer whose expert axis shards over the 'model' mesh axis
+(expert parallelism), run through a batched SwiGLU einsum (MXU-friendly),
+and combined back with their gate weights. Router stays f32 and dense
+(never quantized — tiny and accuracy-critical; see QuantPolicy.skip).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import QTensor
+from .common import ModelConfig, ninit, split_keys, swiglu
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ep = cfg.n_experts_padded or e   # dead-expert padding for EP sharding
+    k = split_keys(key, ["router", "w1", "w3", "w2", "shared"])
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    p = {
+        "router": ninit(k["router"], (d, e)),
+        "experts_w1": ninit(k["w1"], (ep, d, ff)),
+        "experts_w3": ninit(k["w3"], (ep, d, ff)),
+        "experts_w2": ninit(k["w2"], (ep, ff, d), scale=out_scale),
+    }
+    if cfg.shared_d_ff:
+        ks = split_keys(k["shared"], ["w1", "w3", "w2"])
+        p.update({
+            "shared_w1": ninit(ks["w1"], (d, cfg.shared_d_ff)),
+            "shared_w3": ninit(ks["w3"], (d, cfg.shared_d_ff)),
+            "shared_w2": ninit(ks["w2"], (cfg.shared_d_ff, d),
+                               scale=out_scale),
+        })
+    return p
+
+
+def _expert_mm(x, w):
+    """x (E, C, K) @ w (E, K, F) with QTensor support (dequant-then-einsum)."""
+    if isinstance(w, QTensor):
+        w = w.dequantize(x.dtype)
+    return jax.lax.dot_general(
+        x, w.astype(x.dtype), (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def moe_ffn(cfg: ModelConfig, p, x) -> Tuple[jax.Array, jax.Array]:
+    """x (B, T, D) -> (y (B, T, D), load-balance aux loss (scalar f32))."""
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_active
+    n = b * t
+    xf = x.reshape(n, d)
+
+    router_w = p["router"]
+    if isinstance(router_w, QTensor):  # defensive: policy should skip it
+        router_w = router_w.dequantize(jnp.float32)
+    logits = (xf.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # (N, E)
+    gate_w, gate_idx = jax.lax.top_k(probs, k)                # (N, k)
+    gate_w = gate_w / jnp.maximum(
+        jnp.sum(gate_w, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss.
+    me = jnp.mean(probs, axis=0)                              # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, e, dtype=jnp.float32), axis=1),
+        axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # capacity dispatch: slot = expert * C + position-within-expert
+    ep = cfg.n_experts_padded or e   # padded expert tables (EP sharding)
+    cap = max(int(math.ceil(k * n * cfg.capacity_factor / e)), 1)
+    flat_idx = gate_idx.reshape(-1)                           # (N*k,) token-major
+    oh = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)         # (N*k, E)
+    pos = jnp.cumsum(oh, axis=0) - oh                         # arrival order
+    pos = jnp.sum(pos * oh, axis=-1)                          # (N*k,)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_idx * cap + pos, ep * cap)    # dump slot
+
+    buf = jnp.zeros((ep * cap + 1, d), x.dtype)
+    tok_src = jnp.repeat(jnp.arange(n), k)                    # (N*k,)
+    buf = buf.at[slot].set(xf[tok_src])
+    expert_in = buf[: ep * cap].reshape(ep, cap, d)
+
+    h = (jax.nn.silu(_expert_mm(expert_in, p["experts_w1"])
+                     .astype(jnp.float32)) *
+         _expert_mm(expert_in, p["experts_w3"]).astype(jnp.float32))
+    out = _expert_mm(h.astype(x.dtype), p["experts_w2"])      # (Ep, C, D)
+    out_flat = jnp.concatenate(
+        [out.reshape(ep * cap, d), jnp.zeros((1, d), out.dtype)], axis=0)
+
+    gathered = out_flat[slot].reshape(n, k, d)
+    w_eff = (gate_w * keep.reshape(n, k)).astype(jnp.float32)
+    y = jnp.sum(gathered.astype(jnp.float32) * w_eff[..., None], axis=1)
+
+    if cfg.shared_d_ff:
+        y = y + swiglu(xf, p["shared_w1"], p["shared_w3"],
+                       p["shared_w2"]).astype(jnp.float32)
+    return y.reshape(b, t, d).astype(x.dtype), aux

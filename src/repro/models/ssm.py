@@ -1,0 +1,154 @@
+"""Mamba-1 selective SSM block (falcon-mamba / hymba's SSM heads).
+
+The selective scan h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t is a first-order
+linear recurrence, parallelized as a *chunked* scan: ``lax.scan`` over
+chunks (sequential, O(T/chunk) depth) with ``lax.associative_scan`` inside a
+chunk — materializing (B, chunk, d_inner, N) instead of (B, T, d_inner, N),
+which is what makes 500k-token contexts feasible. Channels (d_inner) are
+embarrassingly parallel -> TP shards them (see repro/sharding).
+
+Decode is O(1) in context length: one state update per token — the reason
+this family runs the ``long_500k`` cell that full attention cannot.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense, ninit, split_keys
+
+
+def init_mamba(key, cfg: ModelConfig, prefix: str = "ssm_"):
+    d, di, n, dr, cw = (cfg.d_model, cfg.dinner, cfg.ssm_state, cfg.dtrank,
+                        cfg.conv_width)
+    k = split_keys(key, ["in", "x", "dt", "out", "conv", "a"])
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    # S4D-real initialization for A; dt bias init for softplus ~ [1e-3, 0.1]
+    a_init = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, n + 1, dtype=jnp.float32), (di, n)))
+    u = jax.random.uniform(k["dt"], (di,), jnp.float32)
+    dt_init = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        f"{prefix}in_w": ninit(k["in"], (d, 2 * di)),
+        f"{prefix}conv_w": ninit(k["conv"], (di, cw), scale=0.5),
+        f"{prefix}conv_b": jnp.zeros((di,), jnp.float32),
+        f"{prefix}x_w": ninit(k["x"], (di, dr + 2 * n)),
+        f"{prefix}dt_w": ninit(k["dt"], (dr, di), scale=dr ** -0.5),
+        f"{prefix}dt_bias": dt_bias,
+        f"{prefix}a_log": a_init,
+        f"{prefix}d_skip": jnp.ones((di,), jnp.float32),
+        f"{prefix}out_w": ninit(k["out"], (di, d), scale=out_scale),
+    }
+
+
+def _causal_conv(xi, w, bias, cw: int):
+    """Depthwise causal conv via cw shifted adds. xi (B, T, di), w (di, cw)."""
+    pad = jnp.pad(xi, ((0, 0), (cw - 1, 0), (0, 0)))
+    t = xi.shape[1]
+    out = sum(pad[:, j: j + t] * w[:, j].astype(xi.dtype) for j in range(cw))
+    return out + bias.astype(xi.dtype)
+
+
+def _ssm_coeffs(cfg: ModelConfig, p, xc, prefix: str):
+    """xc (B, T, di) -> (a, bx, c): scan coefficients, all f32."""
+    n, dr = cfg.ssm_state, cfg.dtrank
+    proj = dense(xc, p[f"{prefix}x_w"]).astype(jnp.float32)   # (B,T,dr+2N)
+    dt_r, b_c, c_c = jnp.split(proj, [dr, dr + n], axis=-1)
+    dt = jax.nn.softplus(
+        dense(dt_r.astype(xc.dtype), p[f"{prefix}dt_w"]).astype(jnp.float32)
+        + p[f"{prefix}dt_bias"])                               # (B,T,di)
+    a_mat = -jnp.exp(p[f"{prefix}a_log"].astype(jnp.float32))  # (di,N)
+    a = jnp.exp(dt[..., None] * a_mat)                         # (B,T,di,N)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * b_c[:, :, None, :]
+    return a, bx, c_c
+
+
+def _chunked_scan(a, bx, c, h0, chunk: int):
+    """Linear recurrence h_t = a_t h_{t-1} + bx_t, y_t = <c_t, h_t>.
+
+    a, bx: (B, T, di, N) f32; c: (B, T, N); h0: (B, di, N).
+    Returns (y (B, T, di), h_final).
+    """
+    b, t, di, n = a.shape
+    ch = min(chunk, t)
+    pad = (-t) % ch
+    if pad:  # pad with identity transitions
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = (t + pad) // ch
+    a = a.reshape(b, nc, ch, di, n).transpose(1, 0, 2, 3, 4)
+    bx = bx.reshape(b, nc, ch, di, n).transpose(1, 0, 2, 3, 4)
+    c = c.reshape(b, nc, ch, n).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, inp):
+        ai, bi, ci = inp                                       # (B,ch,di,N)
+
+        def combine(lhs, rhs):
+            (a1, b1), (a2, b2) = lhs, rhs
+            return a1 * a2, a2 * b1 + b2
+
+        pa, pb = jax.lax.associative_scan(combine, (ai, bi), axis=1)
+        hs = pa * h[:, None] + pb                              # (B,ch,di,N)
+        y = jnp.einsum("btdn,btn->btd", hs, ci,
+                       preferred_element_type=jnp.float32)
+        return hs[:, -1], y
+
+    hf, ys = jax.lax.scan(chunk_step, h0, (a, bx, c))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, nc * ch, di)
+    return y[:, :t], hf
+
+
+def mamba_block(cfg: ModelConfig, p, x, h0=None, conv0=None,
+                prefix: str = "ssm_"):
+    """Full-sequence mamba (train / prefill). x (B, T, D).
+
+    Returns (out (B, T, D), h_final (B, di, N) f32, conv_state (B, cw-1, di)).
+    """
+    b, t, _ = x.shape
+    di, n, cw = cfg.dinner, cfg.ssm_state, cfg.conv_width
+    xz = dense(x, p[f"{prefix}in_w"])
+    xi, z = jnp.split(xz, 2, axis=-1)                          # (B,T,di)
+    if conv0 is not None:  # resume from cached conv tail
+        xi_full = jnp.concatenate([conv0.astype(xi.dtype), xi], axis=1)
+        xc = _causal_conv(xi_full, p[f"{prefix}conv_w"],
+                          p[f"{prefix}conv_b"], cw)[:, cw - 1:]
+    else:
+        xc = _causal_conv(xi, p[f"{prefix}conv_w"], p[f"{prefix}conv_b"], cw)
+    xc = jax.nn.silu(xc)
+    a, bx, c = _ssm_coeffs(cfg, p, xc, prefix)
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+    y, hf = _chunked_scan(a, bx, c, h0, cfg.ssm_chunk)
+    y = y + xc.astype(jnp.float32) * p[f"{prefix}d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    conv_tail = jax.lax.dynamic_slice_in_dim(
+        jnp.pad(xi, ((0, 0), (cw - 1, 0), (0, 0))), t, cw - 1, axis=1)
+    return dense(y.astype(x.dtype), p[f"{prefix}out_w"]), hf, conv_tail
+
+
+def mamba_step(cfg: ModelConfig, p, x, h, conv_state, prefix: str = "ssm_"):
+    """Single-token decode. x (B, 1, D); h (B, di, N); conv_state (B, cw-1, di).
+
+    Returns (out (B, 1, D), h', conv_state').
+    """
+    cw = cfg.conv_width
+    xz = dense(x, p[f"{prefix}in_w"])
+    xi, z = jnp.split(xz, 2, axis=-1)                          # (B,1,di)
+    window = jnp.concatenate([conv_state.astype(xi.dtype), xi], axis=1)
+    w = p[f"{prefix}conv_w"]                                   # (di, cw)
+    xc = jnp.einsum("btd,dt->bd", window.astype(jnp.float32),
+                    w.astype(jnp.float32)) + p[f"{prefix}conv_b"]
+    xc = jax.nn.silu(xc)[:, None, :].astype(x.dtype)           # (B,1,di)
+    a, bx, c = _ssm_coeffs(cfg, p, xc, prefix)
+    h_new = a[:, 0] * h + bx[:, 0]                             # (B,di,N)
+    y = jnp.einsum("bdn,bn->bd", h_new, c[:, 0],
+                   preferred_element_type=jnp.float32)[:, None]
+    y = y + xc.astype(jnp.float32) * p[f"{prefix}d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(y.astype(x.dtype), p[f"{prefix}out_w"])
+    return out, h_new, window[:, 1:]

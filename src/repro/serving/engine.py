@@ -1,0 +1,93 @@
+"""Batched serving engine with direct-cast NxFP weights + KV cache.
+
+The deployment the paper targets (§6): dense-trained weights are
+direct-cast once at load time (Algorithm 1), the KV cache is cast per
+token, and every matmul dequantizes on the fly (Pallas kernel on TPU,
+identical jnp path elsewhere). The engine serves fixed-size batches with
+greedy/temperature sampling, per-sequence stop handling, and a step-time
+watchdog (straggler telemetry).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qtensor import QuantPolicy, direct_cast_tree
+from repro.models import decode_step, prefill
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, max_new)
+    n_generated: np.ndarray     # (B,)
+    prefill_seconds: float
+    decode_seconds: float
+    step_times: List[float]
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, policy: QuantPolicy,
+                 max_len: int = 2048, rng_seed: int = 0):
+        self.cfg = cfg
+        self.policy = policy
+        self.max_len = max_len
+        self.params = (direct_cast_tree(params, policy)
+                       if policy.weight_fmt else params)
+        kv = policy.kv_fmt
+        self._prefill = jax.jit(
+            lambda p, b: prefill(cfg, p, b, max_len=max_len, kv_fmt=kv))
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(cfg, p, t, c, kv_fmt=kv))
+        self._key = jax.random.PRNGKey(rng_seed)
+
+    def _sample(self, logits, temperature: float):
+        if temperature == 0.0:
+            return jnp.argmax(logits, axis=-1)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(sub, logits / temperature, axis=-1)
+
+    def generate(self, batch: Dict[str, Any], max_new: int,
+                 temperature: float = 0.0,
+                 stop_token: Optional[int] = None) -> GenerationResult:
+        t0 = time.time()
+        logits, cache = self._prefill(self.params, batch)
+        logits.block_until_ready()
+        t1 = time.time()
+
+        b = batch["tokens"].shape[0]
+        out = np.zeros((b, max_new), np.int32)
+        done = np.zeros((b,), bool)
+        n_gen = np.zeros((b,), np.int32)
+        step_times: List[float] = []
+        tok = self._sample(logits, temperature).astype(jnp.int32)
+        for i in range(max_new):
+            out[:, i] = np.where(done, 0, np.asarray(tok))
+            n_gen += (~done).astype(np.int32)
+            if stop_token is not None:
+                done |= np.asarray(tok) == stop_token
+            if done.all():
+                break
+            ts = time.time()
+            logits, cache = self._decode(self.params, tok[:, None], cache)
+            tok = self._sample(logits, temperature).astype(jnp.int32)
+            tok.block_until_ready()
+            step_times.append(time.time() - ts)
+        t2 = time.time()
+        # straggler telemetry: flag steps > 3x median (host-side watchdog)
+        if len(step_times) > 4:
+            med = float(np.median(step_times))
+            slow = [i for i, s in enumerate(step_times) if s > 3 * med]
+            if slow:
+                print(f"[watchdog] {len(slow)} slow decode steps "
+                      f"(>{3 * med * 1e3:.1f} ms): {slow[:8]}")
+        return GenerationResult(out, n_gen, t1 - t0, t2 - t1, step_times)
+
+    def weights_footprint_bytes(self) -> int:
+        from repro.core.qtensor import tree_footprint_bytes
+        return tree_footprint_bytes(self.params)

@@ -1,0 +1,5 @@
+from .rules import (batch_specs, cache_specs, fit_spec, params_specs,
+                    shard_friendly_config, to_shardings)
+
+__all__ = ["params_specs", "cache_specs", "batch_specs", "fit_spec",
+           "shard_friendly_config", "to_shardings"]

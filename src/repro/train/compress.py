@@ -1,0 +1,135 @@
+"""NxFP gradient compression for the inter-pod all-reduce.
+
+Paper-aligned beyond-paper feature: the Microscaling/Nanoscaling family is a
+direct-cast codec for "weights, KV cache, or even gradients" (paper §1).
+Inter-pod (data-center-interconnect) links are the slowest hop of a
+multi-pod mesh, so we direct-cast gradients to NxFP8 before crossing them.
+
+The per-pod gradient, its Algorithm-1 cast, the uint8 all_gather over the
+'pod' axis and the dequant-mean all live inside ONE ``shard_map`` whose
+'data'/'model' axes are left automatic — each pod computes gradients for
+its own batch shard, and only packed codes + 11-bit/block metadata cross
+the inter-pod links:
+
+    wire bytes = (8 + 11/32) / 32 of f32 grads  (~3.83x less)
+
+Falls back to a wire-format *simulation* (quantize->dequantize per pod-mean
+semantics, collective inserted by GSPMD on dense values) if this JAX
+version lacks shard_map auto axes; numerics are identical and the dry-run
+records which path lowered.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.formats import get_format
+from repro.core.quantize import quantize_blocks_arith
+
+# The codec used here must be (a) GATHER-FREE — XLA's PartitionGather
+# CHECK-crashes on 512-device pod subgroups, (b) ONE-HOT-FREE — a
+# 255-level one-hot matvec materializes ~256x the gradient bytes (observed
+# 15.8 TiB temp on starcoder train), and (c) LAYOUT-PRESERVING — a flatten
+# of a model-sharded leaf forces an all-gather of the whole gradient.
+# quantize_blocks_arith + the arithmetic field decoder satisfy all three;
+# blocks run along each leaf's last axis in its natural layout.
+
+_MIN_COMPRESS = 4096  # tiny leaves (norm scales) ride along in f32
+
+
+def _leaf_roundtrip(g, fmt):
+    """g (..., n) -> (codes (..., nb, B) u8, meta (..., nb) u16, n)."""
+    n = g.shape[-1]
+    pad = (-n) % fmt.block_size
+    x = g.astype(jnp.float32)
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (g.ndim - 1) + [(0, pad)])
+    xb = x.reshape(*x.shape[:-1], -1, fmt.block_size)
+    codes, meta = quantize_blocks_arith(xb, fmt)
+    return codes, meta, n
+
+
+def _leaf_decode(codes, meta, n, shape, dtype, fmt):
+    from repro.kernels.decode_lib import decode_block_values
+    deq = decode_block_values(codes.astype(jnp.int32),
+                              meta.astype(jnp.int32), fmt)
+    deq = deq.reshape(*deq.shape[:-2], -1)[..., :n]
+    return deq.reshape(shape).astype(dtype)
+
+
+def simulate_compress(grads, fmt_name: str = "nxfp8"):
+    """Quantize->dequantize every leaf (wire-format numerics, no collective)."""
+    fmt = get_format(fmt_name)
+
+    def leaf(g):
+        if g.size < _MIN_COMPRESS:
+            return g
+        codes, meta, n = _leaf_roundtrip(g, fmt)
+        return _leaf_decode(codes, meta, n, g.shape, g.dtype, fmt)
+
+    return jax.tree.map(leaf, grads)
+
+
+def _shard_map_auto(body, mesh, in_specs, out_specs):
+    """Partial-manual shard_map (manual over 'pod', rest automatic) across
+    JAX API generations: new API takes the *manual* axis set via
+    ``axis_names``; older ones take the complement via ``auto``."""
+    try:
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names={"pod"},
+                             check_vma=False)
+    except TypeError:
+        from jax.experimental.shard_map import shard_map
+        auto = frozenset(n for n in mesh.axis_names if n != "pod")
+        return shard_map(body, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False, auto=auto)
+
+
+def make_pod_grad_fn(grad_fn: Callable, mesh, fmt_name: str = "nxfp8"
+                     ) -> Tuple[Callable, str]:
+    """Wrap ``grad_fn(params, batch) -> (aux, grads)`` with compressed
+    pod-axis averaging. Batch leaves are sharded on dim 0 over 'pod'.
+
+    Returns (wrapped_fn, mode) where mode is 'shard_map' or 'simulated'.
+    """
+    if "pod" not in mesh.axis_names:
+        return grad_fn, "single_pod"
+    fmt = get_format(fmt_name)
+
+    def body(params, batch):
+        # inside the pod-manual region only 'data' is automatic: narrow the
+        # activation-sharding constraint so it never names the manual axis
+        from repro.sharding.ctx import activation_sharding
+        with activation_sharding(("data",), mesh.shape.get("data", 1)):
+            aux, grads = grad_fn(params, batch)
+
+        def leaf(x):
+            if x.size < _MIN_COMPRESS:   # f32 wire for tiny leaves
+                return jnp.mean(jax.lax.all_gather(x, "pod"), axis=0)
+            codes, meta, n = _leaf_roundtrip(x, fmt)
+            codes_all = jax.lax.all_gather(codes, "pod")
+            meta_all = jax.lax.all_gather(meta, "pod")
+            deq = jax.vmap(lambda c, m: _leaf_decode(
+                c, m, n, x.shape, jnp.float32, fmt))(codes_all, meta_all)
+            return jnp.mean(deq, axis=0).astype(x.dtype)
+
+        grads = jax.tree.map(leaf, grads)
+        aux = jax.tree.map(lambda a: jax.lax.pmean(a, "pod") if a.ndim == 0
+                           else a, aux)
+        return aux, grads
+
+    try:
+        batch_spec = P("pod")
+        wrapped = _shard_map_auto(
+            body, mesh,
+            in_specs=(P(), batch_spec),
+            out_specs=(P(), P()))
+        return wrapped, "shard_map"
+    except Exception:
+        def fallback(params, batch):
+            aux, grads = grad_fn(params, batch)
+            return aux, simulate_compress(grads, fmt_name)
+        return fallback, "simulated"

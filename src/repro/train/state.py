@@ -1,0 +1,20 @@
+"""Train state pytree."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+
+from repro.optim.adamw import AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jax.Array
+
+
+def init_state(params, optimizer) -> TrainState:
+    import jax.numpy as jnp
+    return TrainState(params, optimizer.init(params),
+                      jnp.zeros((), jnp.int32))

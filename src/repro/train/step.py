@@ -1,0 +1,131 @@
+"""pjit-able train / prefill / decode steps with all shardings wired.
+
+train_step: microbatch gradient accumulation (lax.scan), per-layer remat
+(cfg.remat), optional NxFP8 gradient compression over the pod axis, AdamW
+with NaN-skip. serve steps: direct-cast NxFP weights + KV per QuantPolicy.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step as model_decode
+from repro.models import loss_fn, prefill as model_prefill
+from repro.models.common import ModelConfig
+from repro.optim.adamw import AdamW
+from repro.train.compress import make_pod_grad_fn, simulate_compress
+from repro.train.state import TrainState
+
+# dtype of the microbatch gradient-accumulation carry; bf16 halves the
+# data-parallel all-reduce wire bytes at a small accumulation-noise cost
+# (§Perf A/B knob).
+GRAD_ACCUM_DTYPE = jnp.float32
+
+
+def _split_micro(batch: Dict[str, Any], n: int, mesh=None):
+    """(B, ...) -> (n_micro, B/n, ...) KEEPING the batch dim data-sharded.
+
+    Without the explicit constraint GSPMD cannot split a 16-way-sharded
+    dim across the (n_micro, B/n) reshape, silently replicates the batch,
+    and every layer's activations blow up 16x on the wire (observed:
+    falcon train went from 3.9 TB to ~30 GB wire bytes/device/step with
+    this constraint — see EXPERIMENTS.md §Perf).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def r(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        x = x.reshape(n, b // n, *x.shape[1:])
+        if mesh is not None:
+            dp, size = mesh
+            if dp and (b // n) % size == 0:
+                spec = P(None, dp, *((None,) * (x.ndim - 2)))
+                x = jax.lax.with_sharding_constraint(x, spec)
+        return x
+
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(cfg: ModelConfig, optimizer: AdamW,
+                    n_microbatches: int = 1, mesh=None,
+                    grad_compress: Optional[str] = None):
+    """Returns (train_step(state, batch) -> (state, metrics), info dict)."""
+    info = {"compress_mode": "off"}
+
+    def batch_loss(params, batch):
+        loss, metrics = loss_fn(cfg, params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(batch_loss, has_aux=True)
+
+    # data-parallel axes visible to the microbatch sharding constraint:
+    # inside the pod-manual shard_map only 'data' remains automatic.
+    compressed = bool(grad_compress and mesh is not None
+                      and "pod" in mesh.axis_names)
+    if mesh is not None:
+        axes = tuple(a for a in (("data",) if compressed
+                                 else ("pod", "data")) if a in mesh.shape)
+        dp_info = (axes, int(np.prod([mesh.shape[a] for a in axes]))) \
+            if axes else None
+    else:
+        dp_info = None
+
+    def accumulate(params, batch):
+        if n_microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return (loss, metrics), grads
+        micro = _split_micro(batch, n_microbatches, dp_info)
+
+        def step(carry, mb):
+            gacc, lacc = carry
+            (l, _m), g = grad_fn(params, mb)
+            gacc = jax.tree.map(
+                lambda a, b: a + b.astype(GRAD_ACCUM_DTYPE), gacc, g)
+            return (gacc, lacc + l), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, GRAD_ACCUM_DTYPE),
+                          params)
+        (gsum, lsum), _ = jax.lax.scan(step, (g0, 0.0), micro)
+        inv = 1.0 / n_microbatches
+        grads = jax.tree.map(lambda g: g * inv, gsum)
+        return (lsum * inv, {}), grads
+
+    acc_fn = accumulate
+    if grad_compress and mesh is not None and "pod" in mesh.axis_names:
+        acc_fn, info["compress_mode"] = make_pod_grad_fn(
+            accumulate, mesh, grad_compress)
+    elif grad_compress:
+        def _sim(p, b):
+            aux, g = accumulate(p, b)
+            return aux, simulate_compress(g, grad_compress)
+
+        acc_fn = _sim
+        info["compress_mode"] = "simulated"
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        (loss, _metrics), grads = acc_fn(state.params, batch)
+        new_params, new_opt, stats = optimizer.update(
+            grads, state.opt, state.params)
+        metrics = {"loss": loss, **stats}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step, info
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int,
+                      kv_fmt: Optional[str]):
+    def prefill_step(params, batch):
+        return model_prefill(cfg, params, batch, max_len=max_len,
+                             kv_fmt=kv_fmt)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, kv_fmt: Optional[str]):
+    def decode_step(params, tokens, cache):
+        return model_decode(cfg, params, tokens, cache, kv_fmt=kv_fmt)
+    return decode_step

@@ -1,0 +1,10 @@
+# NOTE: no XLA_FLAGS here on purpose — tests and benches must see ONE CPU
+# device; only launch/dryrun.py forces 512 placeholder devices (and tests
+# that need a mesh spawn a subprocess with their own flag).
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

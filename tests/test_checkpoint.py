@@ -1,0 +1,61 @@
+"""Checkpoint manager: atomic roundtrip, keep-k GC, QTensor leaves, resume."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.core import QTensor
+
+
+@pytest.fixture
+def tree(rng):
+    w = (rng.standard_normal((64, 32)) * 0.1).astype(np.float32)
+    return {
+        "params": {"w": jnp.asarray(w),
+                   "q": QTensor.quantize(jnp.asarray(w), "nxfp4", axis=0)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path, tree):
+    save_pytree(tree, tmp_path / "ck")
+    out = load_pytree(tree, tmp_path / "ck")
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    np.testing.assert_array_equal(np.asarray(out["params"]["q"].packed),
+                                  np.asarray(tree["params"]["q"].packed))
+    assert out["params"]["q"].fmt_name == "nxfp4"
+    assert int(out["step"]) == 7
+
+
+def test_incomplete_checkpoint_rejected(tmp_path, tree):
+    save_pytree(tree, tmp_path / "ck")
+    (tmp_path / "ck" / "COMPLETE").unlink()
+    with pytest.raises(AssertionError):
+        load_pytree(tree, tmp_path / "ck")
+
+
+def test_manager_keep_k_and_latest(tmp_path, tree):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    for s in [10, 20, 30, 40]:
+        mgr.save(tree, s)
+    assert mgr.steps() == [30, 40]
+    restored, step = mgr.restore(tree)
+    assert step == 40
+
+
+def test_manager_async(tmp_path, tree):
+    mgr = CheckpointManager(tmp_path, keep=3, async_save=True)
+    for s in [1, 2, 3]:
+        mgr.save(tree, s)
+    mgr.close()
+    assert mgr.steps() == [1, 2, 3]
+
+
+def test_incomplete_steps_invisible(tmp_path, tree):
+    """A crashed write (no COMPLETE marker) is not offered for restore."""
+    mgr = CheckpointManager(tmp_path, keep=3, async_save=False)
+    mgr.save(tree, 5)
+    bad = tmp_path / "step_00000009"
+    bad.mkdir()
+    assert mgr.latest_step() == 5

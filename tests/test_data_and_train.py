@@ -1,0 +1,89 @@
+"""Data pipeline determinism/sharding + optimizer + gradient compression."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data import SyntheticLM, make_data_iter
+from repro.optim.adamw import AdamW, cosine_schedule, global_norm
+from repro.train.compress import simulate_compress
+from repro.core import get_format
+
+
+def test_data_restart_determinism():
+    src = SyntheticLM(vocab=128, seed=1)
+    it1 = make_data_iter(src, 8, 32, seed=5)
+    seq = [next(it1)["tokens"] for _ in range(4)]
+    it2 = make_data_iter(src, 8, 32, seed=5)
+    for _ in range(2):
+        next(it2)
+    np.testing.assert_array_equal(next(it2)["tokens"], seq[2])
+
+
+def test_data_host_sharding_partitions_batch():
+    src = SyntheticLM(vocab=128, seed=1)
+    a = next(make_data_iter(src, 8, 32, seed=5, host_id=0, n_hosts=2))
+    b = next(make_data_iter(src, 8, 32, seed=5, host_id=1, n_hosts=2))
+    assert a["tokens"].shape == (4, 32)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_synthetic_corpus_is_learnable_structure():
+    """Copy structure: a bigram copy-predictor beats uniform entropy."""
+    src = SyntheticLM(vocab=128, seed=1, copy_prob=0.3)
+    toks = src.sample(np.random.default_rng(0), 8, 256)
+    # repeated tokens within copy_back window occur far above chance
+    hits = 0
+    total = 0
+    for row in toks:
+        for t in range(17, 256):
+            total += 1
+            hits += row[t] in row[t - 16: t]
+    assert hits / total > 0.3
+
+
+def test_adamw_descends_quadratic():
+    opt = AdamW(lr=lambda s: 0.1, weight_decay=0.0)
+    params = {"x": jnp.asarray(5.0)}
+    state = opt.init(params)
+    for _ in range(50):
+        grads = {"x": 2 * params["x"]}
+        params, state, stats = opt.update(grads, state, params)
+    assert abs(float(params["x"])) < 0.5
+
+
+def test_adamw_skips_nan_step():
+    opt = AdamW(lr=lambda s: 0.1)
+    params = {"x": jnp.asarray(1.0)}
+    state = opt.init(params)
+    p2, s2, stats = opt.update({"x": jnp.asarray(float("nan"))},
+                               state, params)
+    assert float(stats["skipped"]) == 1.0
+    assert float(p2["x"]) == 1.0
+    assert int(s2.step) == 0
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert abs(float(lr(jnp.asarray(10))) - 1e-3) < 1e-9
+    assert float(lr(jnp.asarray(100))) < 2e-4
+
+
+def test_grad_compression_wire_numerics(rng):
+    """NxFP8 gradient roundtrip: small relative error, exact zeros kept."""
+    grads = {"a": jnp.asarray(rng.standard_normal((333,)).astype(np.float32)
+                              * 1e-3),
+             "b": jnp.zeros((64,), jnp.float32)}
+    out = simulate_compress(grads, "nxfp8")
+    a, oa = np.asarray(grads["a"]), np.asarray(out["a"])
+    rel = np.abs(oa - a) / (np.abs(a) + 1e-12)
+    assert np.median(rel) < 0.05
+    np.testing.assert_array_equal(np.asarray(out["b"]), 0.0)
+    # wire bytes accounting: 8 bits/elem + 16-bit meta per 32
+    fmt = get_format("nxfp8")
+    assert abs(fmt.bits_per_value - (8 + 11 / 32)) < 1e-9
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert abs(float(global_norm(t)) - 5.0) < 1e-6

@@ -1,0 +1,68 @@
+"""Format registry + level-table unit tests (paper §2-§4 semantics)."""
+import numpy as np
+import pytest
+
+from repro.core import ELEMENT_FORMATS, get_format, level_table
+
+
+def test_mxfp4_grid_is_ocp_e2m1():
+    t = level_table("e2m1", cr=False)
+    np.testing.assert_array_equal(
+        t.values_sorted,
+        [-6, -4, -3, -2, -1.5, -1, -0.5, 0, 0.5, 1, 1.5, 2, 3, 4, 6])
+    assert t.emax == 2 and t.max_pos == 6.0 and t.smallest_pos == 0.5
+
+
+def test_code_recycling_adds_half_smallest():
+    t = level_table("e2m1", cr=True)
+    assert -0.25 in t.values_sorted            # paper Fig. 6: -0 -> 1/2 * 0.5
+    assert t.num_levels == 16                  # all 16 codes useful now
+    tb = level_table("int4", cr=True)
+    assert -0.5 in tb.values_sorted            # BFP4 smallest=1 -> 0.5
+
+
+def test_recycle_value_sweepable():
+    t = level_table("e2m1", cr=True, recycle=5.0)  # Fig. 11 midpoint sweep
+    assert 5.0 in t.values_sorted
+
+
+def test_vacant_level_region_fp4():
+    """Paper §3: FP4 has no level in (4, 6) — the vacancy AM addresses."""
+    t = level_table("e2m1", cr=False)
+    pos = t.values_sorted[t.values_sorted > 0]
+    gaps = np.diff(pos)
+    assert gaps.max() == 2.0 and pos[np.argmax(gaps)] == 4.0
+
+
+def test_bits_per_value_accounting():
+    # paper: MxFP block meta = 8b exponent; NxFP adds 2b nano + 1b fmt
+    assert get_format("mxfp4").bits_per_value == 4 + 8 / 32
+    assert get_format("bfp4").bits_per_value == 4 + 8 / 32
+    assert get_format("nxfp4").bits_per_value == 4 + 11 / 32
+    assert get_format("nxfp4_nm").bits_per_value == 4 + 10 / 32
+    assert get_format("nxfp5_bs16").bits_per_value == 5 + 11 / 16
+
+
+def test_format_name_parsing():
+    f = get_format("nxfp4")
+    assert f.nm and f.am and f.cr
+    f = get_format("nxfp4_nm_am")
+    assert f.nm and f.am and not f.cr
+    f = get_format("mxfp6_e3m2")
+    assert f.mx_elem == "e3m2" and not f.am
+    with pytest.raises(ValueError):
+        get_format("foo4")
+
+
+def test_e4m3_nan_excluded():
+    t = level_table("e4m3", cr=False)
+    assert t.max_pos == 448.0
+    assert np.all(np.isfinite(t.values_sorted))
+
+
+@pytest.mark.parametrize("name", list(ELEMENT_FORMATS))
+def test_all_element_tables_build(name):
+    for cr in (False, True):
+        t = level_table(name, cr)
+        assert np.all(np.diff(t.values_sorted) > 0)  # strictly sorted
+        assert len(t.codes_sorted) == t.num_levels

@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + finiteness; prefill/decode with quantized KV agrees
+with an incremental re-prefill."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import (decode_step, forward_train, init_params, loss_fn,
+                          prefill)
+
+
+def _batch(cfg, key, b=2, t=24):
+    batch = {"tokens": jax.random.randint(key, (b, t), 0, cfg.vocab)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (b, cfg.n_audio_frames, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["vision"] = jax.random.normal(
+            key, (b, cfg.n_vision_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key)
+    logits, aux = jax.jit(lambda p, b: forward_train(cfg, p, b))(
+        params, batch)
+    assert logits.shape == (2, 24, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    loss, _ = jax.jit(lambda p, b: loss_fn(cfg, p, b))(params, batch)
+    assert np.isfinite(float(loss))
+    grads = jax.jit(jax.grad(lambda p, b: loss_fn(cfg, p, b)[0]))(
+        params, batch)
+    gn = np.sqrt(sum(float(jnp.sum(jnp.square(g)))
+                     for g in jax.tree.leaves(grads)))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ["llama3_8b", "falcon_mamba_7b",
+                                  "hymba_1_5b", "qwen2_moe_a2_7b",
+                                  "whisper_tiny", "llama_3_2_vision_90b",
+                                  "h2o_danube_3_4b"])
+def test_decode_matches_prefill(arch):
+    """Teacher-forced decode over cached context reproduces the logits of a
+    longer prefill (bf16 tolerance; dense KV so the check is about cache
+    plumbing, not quantization error)."""
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    b, t = 2, 16
+    batch = _batch(cfg, key, b, t)
+    max_len = t + 4
+
+    lg_full, _ = jax.jit(lambda p, bb: prefill(
+        cfg, p, bb, max_len=max_len, kv_fmt=None))(params, batch)
+
+    short = dict(batch)
+    short["tokens"] = batch["tokens"][:, : t - 1]
+    _, cache = jax.jit(lambda p, bb: prefill(
+        cfg, p, bb, max_len=max_len, kv_fmt=None))(params, short)
+    lg_step, _ = jax.jit(lambda p, tok, c: decode_step(
+        cfg, p, tok, c, kv_fmt=None))(params, batch["tokens"][:, t - 1:t],
+                                      cache)
+    np.testing.assert_allclose(np.asarray(lg_step), np.asarray(lg_full),
+                               rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("arch", ["llama3_8b", "hymba_1_5b"])
+def test_quantized_kv_close_to_dense(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key, 2, 16)
+    lq, cq = jax.jit(lambda p, bb: prefill(cfg, p, bb, max_len=24,
+                                           kv_fmt="nxfp4"))(params, batch)
+    ld, cd = jax.jit(lambda p, bb: prefill(cfg, p, bb, max_len=24,
+                                           kv_fmt=None))(params, batch)
+    # prefill last-logits don't touch the cache; decode does:
+    tok = jnp.argmax(ld, -1)[:, None].astype(jnp.int32)
+    lq2, _ = jax.jit(lambda p, tt, c: decode_step(
+        cfg, p, tt, c, kv_fmt="nxfp4"))(params, tok, cq)
+    ld2, _ = jax.jit(lambda p, tt, c: decode_step(
+        cfg, p, tt, c, kv_fmt=None))(params, tok, cd)
+    # direct-cast KV error is small but nonzero
+    rel = (np.abs(np.asarray(lq2) - np.asarray(ld2)).max()
+           / (np.abs(np.asarray(ld2)).max() + 1e-9))
+    assert rel < 0.15, rel
+
+
+def test_param_counts_match_public_sizes():
+    """Full configs land near the published parameter counts.
+
+    Two archs run wider bands by design (documented in DESIGN.md §6): this
+    framework uses SwiGLU MLPs and untied embeddings everywhere, which
+    inflates whisper-tiny (tied embeds + 2-matrix GELU MLP upstream) and
+    starcoder2 (2-matrix MLP upstream).
+    """
+    expect = {
+        "qwen2_moe_a2_7b": (14.3e9, 1.45), "phi3_5_moe_42b": (41.9e9, 1.45),
+        "whisper_tiny": (39e6, 1.6), "falcon_mamba_7b": (7.3e9, 1.45),
+        "h2o_danube_3_4b": (4.0e9, 1.45), "llama3_405b": (405e9, 1.45),
+        "deepseek_67b": (67e9, 1.45), "starcoder2_3b": (3.0e9, 1.5),
+        "llama_3_2_vision_90b": (88e9, 1.45), "hymba_1_5b": (1.5e9, 1.45),
+        "llama2_7b": (6.7e9, 1.45), "llama3_8b": (8.0e9, 1.45),
+    }
+    for arch, (n, hi) in expect.items():
+        got = get_config(arch).param_count()
+        assert 0.6 * n < got < hi * n, (arch, got, n)
