@@ -5,21 +5,39 @@ is not representative of TPU wall time, so the timed path here is the
 jit'd XLA implementation (the math the kernels implement); we additionally
 report the kernel-path analytic HBM traffic (packed bytes vs bf16 bytes)
 — the quantity that sets TPU wall time on the memory-bound roofline.
+
+The quantize section times the fused encode+pack pipeline (arithmetic grid
+snap + shift-or pack — the math of the fused Pallas kernel) against the
+seed three-pass pipeline (searchsorted+take encode -> int32 codes ->
+scatter-add repack), and reports the analytic kernel-path HBM *write*
+bytes of both (the fused kernel writes bits/8 bytes/element once; the
+seed kernel wrote 4-byte codes that the repack re-read and re-wrote).
+
+NXFP_BENCH_QUICK=1 (set by ``benchmarks/run.py --quick``) shrinks the
+shapes for CI smoke runs.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import QTensor, get_format
+from repro.core.pack import pack_codes_scatter
+from repro.core.quantize import quantize_blocks, to_blocks
 from repro.kernels.ops import qmatmul, quantize_qtensor, decode_attention
 from .common import Csv, timed
 
 
+def _quick() -> bool:
+    return os.environ.get("NXFP_BENCH_QUICK") == "1"
+
+
 def run(csv: Csv):
     rng = np.random.default_rng(0)
-    m, k, n = 64, 2048, 2048
+    m, k, n = (64, 512, 512) if _quick() else (64, 2048, 2048)
     x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
     w = jnp.asarray((rng.standard_normal((k, n)) * 0.05).astype(np.float32))
 
@@ -38,17 +56,42 @@ def run(csv: Csv):
                 f"hbm_reduction={w.size * 2 / q.nbytes():.2f}x "
                 f"rel_err={err:.2e}")
 
-    # quantize throughput (Algorithm 1)
-    big = jnp.asarray(rng.standard_normal((4096, 512)).astype(np.float32))
+    # quantize throughput (Algorithm 1): fused encode+pack vs seed pipeline
+    rows = 1024 if _quick() else 4096
+    big = jnp.asarray(rng.standard_normal((rows, 512)).astype(np.float32))
     for f in ["nxfp4", "mxfp4", "nxfp8"]:
+        fmt = get_format(f)
+
+        def seed_pipeline(a, fmt=fmt):
+            """PR-0 path: searchsorted+take encode (with the per-candidate
+            stack/take_along_axis argmin) -> scatter-add repack."""
+            xb, _ = to_blocks(a, fmt.block_size, -1)
+            codes, meta = quantize_blocks(xb, fmt)
+            return pack_codes_scatter(codes, fmt.bits), meta
+
+        us_seed, _ = timed(jax.jit(seed_pipeline), big)
         fn = jax.jit(lambda a, ff=f: quantize_qtensor(a, ff, axis=-1,
                                                       impl="xla").packed)
         us, _ = timed(fn, big)
         gbps = big.size * 4 / (us / 1e6) / 1e9
-        csv.add(f"kernels/quantize/{f}", us, f"throughput={gbps:.2f}GB/s")
+        # analytic kernel-path HBM write bytes per cast (TPU roofline):
+        # seed = int32 codes + int32 meta out of the quantize kernel, plus
+        # the repack pass's packed+uint16-meta output; fused = packed uint8
+        # + one int32 meta lane, written once.
+        elems = big.size
+        nb = elems // fmt.block_size
+        seed_wr = elems * 4 + nb * 4 + elems * fmt.bits // 8 + nb * 2
+        fused_wr = elems * fmt.bits // 8 + nb * 4
+        csv.add(f"kernels/quantize/{f}", us,
+                f"throughput={gbps:.2f}GB/s "
+                f"speedup_vs_seed={us_seed / us:.2f}x "
+                f"hbm_write_reduction={seed_wr / fused_wr:.2f}x")
+        csv.add(f"kernels/quantize/{f}-seed-pipeline", us_seed,
+                f"encode=searchsorted pack=scatter-add "
+                f"hbm_write_bytes={seed_wr}")
 
     # decode attention over a quantized cache
-    b, s, h, kvh, d = 4, 4096, 8, 4, 64
+    b, s, h, kvh, d = (4, 512, 8, 4, 64) if _quick() else (4, 4096, 8, 4, 64)
     q = jnp.asarray(rng.standard_normal((b, h, d)).astype(np.float32))
     kc = jnp.asarray((rng.standard_normal((b, s, kvh, d)) * 0.3)
                      .astype(np.float32))
@@ -61,7 +104,8 @@ def run(csv: Csv):
     kv_bf16 = b * s * kvh * d * 2 * 2
     kv_packed = int(np.prod(kq.packed.shape)) * 2 + \
         int(np.prod(kq.meta.shape)) * 2 * 2
-    csv.add("kernels/decode-attn/nxfp4-kv-4k", us,
+    csv.add(f"kernels/decode-attn/nxfp4-kv-{s // 1024}k" if s >= 1024
+            else f"kernels/decode-attn/nxfp4-kv-{s}", us,
             f"kv_hbm_reduction={kv_bf16 / kv_packed:.2f}x")
 
 

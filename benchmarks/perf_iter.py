@@ -109,6 +109,29 @@ def _psum_bf16():
     return {}
 
 
+@variant("fused_quant")
+def _fused_quant():
+    """Fused arithmetic encode+pack quantize pipeline + packed gradient
+    wire (the default since ISSUE-1): explicit row so A/B logs name it."""
+    import repro.kernels.ops as ops
+    import repro.train.compress as compress
+    ops.XLA_QUANT_ENCODER = "arith"
+    compress.WIRE_PACK = True
+    return {}
+
+
+@variant("seed_quant")
+def _seed_quant():
+    """Pre-ISSUE-1 baseline for A/B: the three-pass quantize pipeline
+    (searchsorted+take encode, scatter-add repack, no fused kernel on any
+    backend) and the unpacked gradient wire format."""
+    import repro.kernels.ops as ops
+    import repro.train.compress as compress
+    ops.XLA_QUANT_ENCODER = "reference"
+    compress.WIRE_PACK = False
+    return {}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)

@@ -4,10 +4,12 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement).
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only fig8,table1
+  PYTHONPATH=src python -m benchmarks.run --quick --only kernels  # CI smoke
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
 
@@ -21,7 +23,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(_SUITES))
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: shrink benchmark shapes (sets "
+                         "NXFP_BENCH_QUICK=1 for suites that honor it)")
     args = ap.parse_args()
+    if args.quick:
+        os.environ["NXFP_BENCH_QUICK"] = "1"
     only = args.only.split(",") if args.only else _SUITES
 
     csv = Csv()

@@ -3,7 +3,9 @@ from .formats import BlockFormat, ElementFormat, get_format, ELEMENT_FORMATS
 from .levels import LevelTable, level_table
 from .pack import bytes_per_block, pack_codes, unpack_codes
 from .quantize import (dequantize, dequantize_blocks, from_blocks, meta_fields,
-                       pack_meta, quantize, quantize_blocks, to_blocks)
+                       pack_meta, quantize, quantize_blocks,
+                       quantize_blocks_arith, quantize_blocks_gatherfree,
+                       to_blocks)
 from .qtensor import (QTensor, QuantPolicy, dense_like, direct_cast_tree,
                       tree_footprint_bytes)
 
@@ -11,7 +13,8 @@ __all__ = [
     "BlockFormat", "ElementFormat", "get_format", "ELEMENT_FORMATS",
     "LevelTable", "level_table",
     "bytes_per_block", "pack_codes", "unpack_codes",
-    "quantize", "dequantize", "quantize_blocks", "dequantize_blocks",
+    "quantize", "dequantize", "quantize_blocks", "quantize_blocks_arith",
+    "quantize_blocks_gatherfree", "dequantize_blocks",
     "to_blocks", "from_blocks", "meta_fields", "pack_meta",
     "QTensor", "QuantPolicy", "dense_like", "direct_cast_tree",
     "tree_footprint_bytes",

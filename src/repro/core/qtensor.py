@@ -13,7 +13,18 @@ from .pack import pack_codes, unpack_codes
 from .quantize import (dequantize_blocks, from_blocks, quantize_blocks,
                        to_blocks)
 
-__all__ = ["QTensor", "QuantPolicy", "direct_cast_tree", "tree_footprint_bytes"]
+__all__ = ["QTensor", "QuantPolicy", "direct_cast_tree", "fmt_key",
+           "tree_footprint_bytes"]
+
+
+def fmt_key(fmt: BlockFormat):
+    """QTensor.fmt_name for a BlockFormat: the registry name when it
+    round-trips (checkpoint-serializable), else the BlockFormat itself
+    (ad-hoc formats, e.g. custom recycle values in the Fig. 11 sweep)."""
+    try:
+        return fmt.name if get_format(fmt.name) == fmt else fmt
+    except ValueError:
+        return fmt
 
 
 @jax.tree_util.register_pytree_node_class
@@ -68,11 +79,7 @@ class QTensor:
         axis = axis if axis < 0 else axis - x.ndim
         xb, n = to_blocks(x, fmt.block_size, axis)
         codes, meta = quantize_blocks(xb, fmt)
-        try:  # prefer the registry name (checkpoint-serializable)
-            key = fmt.name if get_format(fmt.name) == fmt else fmt
-        except ValueError:
-            key = fmt
-        return cls(pack_codes(codes, fmt.bits), meta, key,
+        return cls(pack_codes(codes, fmt.bits), meta, fmt_key(fmt),
                    tuple(x.shape), axis, n)
 
     def dequantize(self, dtype=jnp.bfloat16):
@@ -137,13 +144,22 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
-def direct_cast_tree(params, policy: QuantPolicy):
-    """Direct-cast a parameter pytree: matching leaves become QTensor."""
+def direct_cast_tree(params, policy: QuantPolicy, quantize_fn=None):
+    """Direct-cast a parameter pytree: matching leaves become QTensor.
+
+    ``quantize_fn(leaf, fmt, axis) -> QTensor`` overrides the encoder;
+    default is the reference-oracle ``QTensor.quantize``. The serving
+    engine passes ``repro.kernels.ops.quantize_qtensor`` so load-time
+    weight casts ride the fused encode+pack kernel (core cannot import
+    kernels itself — that would be a circular import).
+    """
+    qfn = quantize_fn or (
+        lambda leaf, fmt, axis: QTensor.quantize(leaf, fmt, axis=axis))
 
     def cast(path, leaf):
         p = _path_str(path)
         if policy.matches(p, leaf):
-            return QTensor.quantize(leaf, policy.weight_fmt, axis=policy.axis)
+            return qfn(leaf, policy.weight_fmt, policy.axis)
         return leaf
 
     return jax.tree_util.tree_map_with_path(cast, params)

@@ -37,6 +37,8 @@ from .levels import level_table
 __all__ = [
     "quantize_blocks",
     "quantize_blocks_gatherfree",
+    "quantize_blocks_arith",
+    "arith_encode_blocks",
     "dequantize_blocks",
     "quantize",
     "dequantize",
@@ -54,6 +56,29 @@ def _floor_log2(x):
     """floor(log2 x) for x > 0 (exact, via frexp); returns int32."""
     _, e = jnp.frexp(x)
     return (e - 1).astype(jnp.int32)
+
+
+def pow2i(e):
+    """Exact 2**e for int32 e in [-126, 127] via exponent-bit assembly.
+
+    Canonical definition (re-exported by repro.kernels.decode_lib): cheaper
+    than ldexp on every backend and legal inside Pallas kernel bodies.
+    """
+    e = jnp.clip(e, -126, 127).astype(jnp.int32)
+    return jax.lax.bitcast_convert_type((e + 127) << 23, jnp.float32)
+
+
+def floor_log2_bits(v):
+    """floor(log2 v) for positive f32 via exponent-field extraction.
+
+    Matches ``_floor_log2(max(v, tiny))``: zeros and subnormals clamp to
+    -126 — exact wherever the codec consumes it (every element format's
+    emin is >= -6, so the subnormal exponent is always masked by a
+    ``maximum(..., emin)`` downstream).
+    """
+    bits = jax.lax.bitcast_convert_type(v, jnp.int32)
+    e = ((bits >> 23) & 0xFF) - 127
+    return jnp.where(v < jnp.finfo(jnp.float32).tiny, jnp.int32(-126), e)
 
 
 def meta_fields(meta):
@@ -224,7 +249,7 @@ def quantize_blocks_gatherfree(xb, fmt: BlockFormat):
     best_mse = jnp.full(vmax.shape, jnp.inf, jnp.float32)
     best_codes = jnp.zeros(xb.shape, jnp.int32)
     best_meta = jnp.zeros(vmax.shape, jnp.int32)
-    for fmt_bit, table, nano_mode in _candidates(fmt):
+    for ci, (fmt_bit, table, nano_mode) in enumerate(_candidates(fmt)):
         e_shared = _floor_log2(jnp.maximum(vmax, jnp.finfo(jnp.float32).tiny))
         e_shared = jnp.clip(e_shared - table.emax, -126, 127)
         scale0 = jnp.ldexp(jnp.float32(1.0), e_shared)
@@ -248,7 +273,10 @@ def quantize_blocks_gatherfree(xb, fmt: BlockFormat):
                         axis=-1)
         deq = values * scale[..., None]
         mse = jnp.mean(jnp.square(deq - xb), axis=-1)
-        take = mse < best_mse
+        # first candidate wins unconditionally: matches argmin tie-breaking
+        # AND keeps huge blocks (mse overflowing to inf) encoded instead of
+        # falling through to all-zero codes (inf < inf is never true).
+        take = (mse < best_mse) if ci else jnp.ones_like(mse, bool)
         best_codes = jnp.where(take[..., None], codes, best_codes)
         meta = (e_shared + _E_BIAS) | (nano << 8) | (fmt_bit << 10)
         best_meta = jnp.where(take, meta, best_meta)
@@ -262,80 +290,127 @@ def quantize_blocks_arith(xb, fmt: BlockFormat):
     Rounds onto the element grid with exponent/ulp arithmetic instead of a
     one-hot matvec — O(1) memory overhead per element, required for
     wire-compressing multi-GB gradient tensors (a 255-level one-hot
-    materializes ~256x the input bytes). Uses round-to-nearest-even at
-    level midpoints (the reference uses ties-down), so codes can differ
-    from quantize_blocks at exact midpoints only; decode compatibility is
-    exact (same grid).
+    materializes ~256x the input bytes). This is the canonical encoder of
+    the repo's codec layer: the fused Pallas quantize+pack kernel
+    (``repro.kernels.nxfp_quantize``) is a bit-identical port of this
+    function, and the XLA fallback of ``quantize_qtensor`` calls it
+    directly (DESIGN.md §2).
+
+    Midpoint ties (DESIGN.md §2.3): ``jnp.round`` is round-half-to-EVEN in
+    ulp units, so a value exactly halfway between two adjacent levels
+    snaps to the level whose ulp-count is even — e.g. BFP magnitude 1.5
+    encodes as 2, where the searchsorted reference (``quantize_blocks``)
+    resolves the same tie DOWNWARD (toward -inf on the sorted grid, 1.5 ->
+    1). Codes may therefore differ from ``quantize_blocks`` at exact grid
+    midpoints ONLY — a measure-zero set for direct-cast inputs — and both
+    choices are nearest-level rounds. Decode compatibility is exact (same
+    grid, same metadata).
+
+    Only the default ``recycle="half_smallest"`` remap is supported (the
+    CR window test is hard-coded to it); sweeps with custom recycle values
+    (Fig. 11) must use the table-driven ``quantize_blocks``.
+    """
+    assert not fmt.cr or fmt.recycle == "half_smallest", (
+        "quantize_blocks_arith supports only the default CR remap; use "
+        "quantize_blocks for custom recycle sweeps")
+    codes, meta = arith_encode_blocks(xb, fmt)
+    return codes.astype(jnp.uint8), meta.astype(jnp.uint16)
+
+
+def _encode_candidate_arith(xb, vmax, vmax_e, fmt_bit, nano_mode, table,
+                            cr: bool):
+    """Arithmetic encode of one (element format x nano) candidate.
+
+    Pure jnp on f32/int32 only — every op (including the exponent-bit
+    pow2i/floor_log2_bits and the mantissa-field extraction below) is
+    legal inside a Pallas kernel body; the fused TPU kernel calls exactly
+    this function, so kernel/XLA bit-identity holds by construction.
+    """
+    elem = table.fmt
+    bits, mbits, bias = elem.bits, elem.mbits, elem.bias
+    max_pos = np.float32(table.max_pos)
+    e_shared = jnp.clip(vmax_e - table.emax, -126, 127)
+    scale0 = pow2i(e_shared)
+    if nano_mode is None:
+        nano = jnp.zeros_like(e_shared)
+    elif nano_mode == "round":
+        r = vmax / (scale0 * max_pos)
+        nano = jnp.clip(jnp.round((r - 1.0) * 4.0), 0, 3).astype(jnp.int32)
+    else:
+        nano = jnp.full_like(e_shared, int(nano_mode))
+    scale = scale0 * (1.0 + nano.astype(jnp.float32) * 0.25)
+    vp = xb * (1.0 / scale)[..., None]
+    a = jnp.abs(vp)
+    neg = vp < 0
+
+    if elem.is_bfp:
+        mmax = (1 << (bits - 1)) - 1
+        q = jnp.clip(jnp.round(a), 0, mmax)
+        mag = q.astype(jnp.int32)
+        val = q
+        smallest = 1.0
+    else:
+        emin = 1 - bias
+        a_c = jnp.minimum(a, max_pos)
+        # snap to the grid in ulp units (round-to-nearest-even): the ulp
+        # is an exact power of two, so scaling by it is exact both ways
+        e_eff = jnp.maximum(floor_log2_bits(a_c), emin)
+        q = jnp.round(a_c * pow2i(mbits - e_eff)) * pow2i(e_eff - mbits)
+        q = jnp.minimum(q, max_pos)
+        # read the code fields straight out of q's f32 bit pattern (q is a
+        # grid point: mantissa bits below the top mbits are zero; a binade
+        # carry from the round lands in the exponent field automatically)
+        qbits = jax.lax.bitcast_convert_type(q, jnp.int32)
+        e_q = ((qbits >> 23) & 0xFF) - 127
+        m_top = (qbits >> (23 - mbits)) & ((1 << mbits) - 1)
+        m_sub = (q * np.float32(2.0 ** (mbits - emin))).astype(jnp.int32)
+        normal = q >= np.float32(2.0 ** emin)
+        mag = jnp.where(normal, ((e_q + bias) << mbits) | m_top, m_sub)
+        val = q
+        smallest = (0.5 ** mbits) * 2.0 ** emin
+    codes = jnp.where(neg, (1 << (bits - 1)) | mag, mag)
+    val = jnp.where(neg, -val, val)
+    # negatives that snap to zero take the canonical +0 code: without CR
+    # the 10...0 code is a wasted -0 duplicate the grid never emits, with
+    # CR it now MEANS -smallest/2.
+    codes = jnp.where((mag == 0) & neg, 0, codes)
+    if cr:
+        # the recycle window (-0.75, -0.25) x smallest maps to 10...0
+        win = (vp > np.float32(-0.75 * smallest)) & \
+              (vp < np.float32(-0.25 * smallest))
+        codes = jnp.where(win, 1 << (bits - 1), codes)
+        val = jnp.where(win, np.float32(-0.5 * smallest), val)
+    deq = val * scale[..., None]
+    mse = jnp.mean(jnp.square(deq - xb), axis=-1)
+    meta = (e_shared + _E_BIAS) | (nano << 8) | (fmt_bit << 10)
+    return codes, meta, mse
+
+
+def arith_encode_blocks(xb, fmt: BlockFormat):
+    """Shared arithmetic encode body: (..., nb, B) f32 -> int32 codes/meta.
+
+    Pallas-safe pure jnp; both ``quantize_blocks_arith`` and the fused
+    kernel body of ``repro.kernels.nxfp_quantize`` run this exact code.
     """
     xb = jnp.nan_to_num(xb.astype(jnp.float32), posinf=1e30, neginf=-1e30)
     vmax = jnp.max(jnp.abs(xb), axis=-1)
+    vmax_e = floor_log2_bits(vmax)          # shared across candidates
 
     best_mse = jnp.full(vmax.shape, jnp.inf, jnp.float32)
     best_codes = jnp.zeros(xb.shape, jnp.int32)
     best_meta = jnp.zeros(vmax.shape, jnp.int32)
-    tiny = jnp.finfo(jnp.float32).tiny
-    for fmt_bit, table, nano_mode in _candidates(fmt):
-        elem = table.fmt
-        bits, mbits, bias = elem.bits, elem.mbits, elem.bias
-        e_shared = _floor_log2(jnp.maximum(vmax, tiny)) - table.emax
-        e_shared = jnp.clip(e_shared, -126, 127)
-        scale0 = jnp.ldexp(jnp.float32(1.0), e_shared)
-        if nano_mode is None:
-            nano = jnp.zeros_like(e_shared)
-        elif nano_mode == "round":
-            r = vmax / (scale0 * np.float32(table.max_pos))
-            nano = jnp.clip(jnp.round((r - 1.0) * 4.0), 0, 3).astype(jnp.int32)
-        else:
-            nano = jnp.full_like(e_shared, int(nano_mode))
-        scale = scale0 * (1.0 + nano.astype(jnp.float32) * 0.25)
-        vp = xb * (1.0 / scale)[..., None]
-        a = jnp.abs(vp)
-        neg = vp < 0
-
-        if elem.is_bfp:
-            mmax = (1 << (bits - 1)) - 1
-            q = jnp.clip(jnp.round(a), 0, mmax)
-            mag = q.astype(jnp.int32)
-            val = q
-            smallest = 1.0
-        else:
-            emin = 1 - bias
-            a_c = jnp.minimum(a, np.float32(table.max_pos))
-            e_v = _floor_log2(jnp.maximum(a_c, tiny))
-            e_eff = jnp.maximum(e_v, emin)
-            ulp = jnp.ldexp(jnp.float32(1.0), e_eff - mbits)
-            q = jnp.round(a_c / ulp) * ulp
-            q = jnp.minimum(q, np.float32(table.max_pos))
-            # rebuild fields from q (self-consistent after binade carry)
-            e_q = _floor_log2(jnp.maximum(q, tiny))
-            normal = q >= np.float32(2.0 ** emin)
-            e_field = jnp.where(normal, e_q + bias, 0)
-            frac = q * jnp.ldexp(jnp.float32(1.0),
-                                 -jnp.where(normal, e_q, emin))
-            m_field = jnp.round(
-                jnp.where(normal, frac - 1.0, frac) * (1 << mbits))
-            mag = ((e_field << mbits) | m_field.astype(jnp.int32))
-            mag = jnp.where(q == 0.0, 0, mag)
-            val = q
-            smallest = (0.5 ** mbits) * 2.0 ** emin
-        codes = jnp.where(neg, (1 << (bits - 1)) | mag, mag)
-        val = jnp.where(neg, -val, val)
-        if fmt.cr:
-            # "-0" must encode as +0 (code 10...0 now MEANS -smallest/2)...
-            codes = jnp.where((mag == 0) & neg, 0, codes)
-            # ...and the recycle window (-0.75, -0.25) x smallest maps to it
-            win = (vp > np.float32(-0.75 * smallest)) & \
-                  (vp < np.float32(-0.25 * smallest))
-            codes = jnp.where(win, 1 << (bits - 1), codes)
-            val = jnp.where(win, np.float32(-0.5 * smallest), val)
-        deq = val * scale[..., None]
-        mse = jnp.mean(jnp.square(deq - xb), axis=-1)
-        take = mse < best_mse
+    for ci, (fmt_bit, table, nano_mode) in enumerate(_candidates(fmt)):
+        codes, meta, mse = _encode_candidate_arith(
+            xb, vmax, vmax_e, fmt_bit, nano_mode, table, fmt.cr)
+        # strict less, first candidate unconditional: matches the
+        # reference argmin tie-breaking AND keeps huge blocks (mse
+        # overflowing to inf) encoded instead of falling through to
+        # all-zero codes (inf < inf is never true).
+        take = (mse < best_mse) if ci else jnp.ones_like(mse, bool)
         best_codes = jnp.where(take[..., None], codes, best_codes)
-        meta = (e_shared + _E_BIAS) | (nano << 8) | (fmt_bit << 10)
         best_meta = jnp.where(take, meta, best_meta)
         best_mse = jnp.where(take, mse, best_mse)
-    return best_codes.astype(jnp.uint8), best_meta.astype(jnp.uint16)
+    return best_codes, best_meta
 
 
 def fake_quant(x, fmt, axis: int = -1):

@@ -4,7 +4,8 @@ The paper's compute hot-spot is the on-the-fly dequantization pipeline
 (Fig. 7); the three kernels here are its TPU-native realizations:
 
   nxfp_matmul     fused dequant GEMM (weights stream packed HBM -> VMEM)
-  nxfp_quantize   Algorithm-1 MSE block quantizer (KV-cache / grad casts)
+  nxfp_quantize   fused Algorithm-1 encode+pack (KV-cache / grad casts —
+                  arithmetic grid snap, packed uint8 out, no int32 round-trip)
   nxfp_attention  flash-decode over an NxFP-packed KV cache
 """
 from .ops import decode_attention, qmatmul, quantize_qtensor

@@ -15,15 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import BlockFormat, ELEMENT_FORMATS
+from repro.core.quantize import pow2i  # canonical definition (re-export)
 
 __all__ = ["pow2i", "decode_elem", "decode_scale", "decode_block_values",
            "unpack_codes_pallas"]
-
-
-def pow2i(e):
-    """Exact 2**e for int32 e in [-126, 127] via exponent-bit assembly."""
-    e = jnp.clip(e, -126, 127).astype(jnp.int32)
-    return jax.lax.bitcast_convert_type((e + 127) << 23, jnp.float32)
 
 
 def decode_elem(codes, elem_name: str, cr: bool):

@@ -1,18 +1,29 @@
-"""Pallas block quantizer — Algorithm 1 (MSE search) on the VPU.
+"""Pallas fused block quantizer — Algorithm 1 (MSE search) + bit-pack.
 
-Quantizes blocked f32 input to NxFP codes + metadata entirely with vector
-ops: per-block max, shared-exponent extraction from float32 exponent bits,
-NanoMantissa rounding, per-candidate (element format x nano) grid snap via
-a one-hot matvec against the level grid (<= 2**bits levels — no gathers),
-and a running strict-less MSE argmin exactly mirroring the reference
-quantizer's candidate order and tie-breaking.
+Single-pass encode+pack on the VPU: per-block max, shared-exponent
+extraction from float32 exponent bits, NanoMantissa rounding, and a
+per-candidate (element format x nano) *arithmetic* grid snap — the kernel
+body runs ``repro.core.quantize.arith_encode_blocks``, the exact code
+behind ``quantize_blocks_arith``, so kernel/XLA bit-identity holds by
+construction (same ops, same candidate order, same strict-less argmin).
 
-Level grids are tiny (<= 256 entries) and are passed as kernel operands
-(stacked per candidate table, padded with +inf boundaries) — they live in
-VMEM and are re-read per tile, a negligible fraction of the tile bytes.
+Versus the seed three-pass pipeline (one-hot grid snap -> int32 codes to
+HBM -> separate XLA repack), this kernel eliminates:
 
-Used on TPU for runtime casts that sit on the critical path: per-step KV
-cache quantization and NxFP gradient compression before the pod-axis
+  * the one-hot matvec against VMEM-resident level tables, which
+    materialized a (rows, block, levels) intermediate — up to ~256x the
+    tile bytes for 8-bit formats — per candidate;
+  * the int32 HBM round-trip: codes are packed to sub-byte lanes INSIDE
+    the kernel (shift + constant 0/1-routing matmul over the 32-element
+    block axis, exact in f32 — same layout as ``repro.core.pack``), so
+    the kernel writes ``bits/8`` bytes per element instead of 4, an 8x/4x
+    HBM write reduction at 4/8 bit before even counting the repack pass
+    it replaces.
+
+Byte-aligned element widths only (4/8-bit: a code never straddles bytes);
+5/6-bit formats take the XLA arithmetic fallback in ops.py. Used on TPU
+for runtime casts that sit on the critical path: per-step KV cache
+quantization and NxFP gradient compression before the pod-axis
 all-reduce.
 """
 from __future__ import annotations
@@ -21,125 +32,71 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.formats import BlockFormat
-from repro.core.quantize import _candidates  # static candidate list (shared)
-from .decode_lib import pow2i
+from repro.core.pack import bytes_per_block
+from repro.core.quantize import arith_encode_blocks
 
-__all__ = ["nxfp_quantize_pallas"]
-
-_E_BIAS = 128
+__all__ = ["nxfp_quantize_pack_pallas"]
 
 
-def _floor_log2_bits(v):
-    """floor(log2 v) for normal positive f32 via exponent-field extraction."""
-    bits = jax.lax.bitcast_convert_type(v, jnp.int32)
-    e = ((bits >> 23) & 0xFF) - 127
-    # zero/subnormal blocks: match the reference's max(v, tiny) clamp
-    return jnp.where(v < jnp.finfo(jnp.float32).tiny, jnp.int32(-126), e)
-
-
-def _table_arrays(fmt: BlockFormat):
-    """Stack the distinct candidate level tables, padded to a common width.
-
-    Returns (cands, bounds (T, Lm-1), values (T, Lm), codes (T, Lm)) where
-    cands = [(fmt_bit, table_idx, nano_mode, emax, max_pos), ...].
-    """
-    tables = []
-    cands = []
-    for fmt_bit, table, nano_mode in _candidates(fmt):
-        if table not in tables:
-            tables.append(table)
-        cands.append((fmt_bit, tables.index(table), nano_mode,
-                      table.emax, float(table.max_pos)))
-    lm = max(t.num_levels for t in tables)
-    bounds = np.full((len(tables), lm - 1), np.inf, np.float32)
-    values = np.zeros((len(tables), lm), np.float32)
-    codes = np.zeros((len(tables), lm), np.int32)
-    for i, t in enumerate(tables):
-        bounds[i, : t.num_levels - 1] = t.boundaries
-        values[i, : t.num_levels] = t.values_sorted
-        codes[i, : t.num_levels] = t.codes_sorted
-    return cands, bounds, values, codes
-
-
-def _kernel(x_ref, b_ref, v_ref, c_ref, codes_ref, meta_ref, *, cands):
+def _kernel(x_ref, packed_ref, meta_ref, *, fmt: BlockFormat):
     xb = x_ref[...].astype(jnp.float32)                     # (R, B)
-    vmax = jnp.max(jnp.abs(xb), axis=-1)                    # (R,)
+    best_codes, best_meta = arith_encode_blocks(xb, fmt)
 
-    best_mse = jnp.full(vmax.shape, jnp.inf, jnp.float32)
-    best_codes = jnp.zeros(xb.shape, jnp.int32)
-    best_meta = jnp.zeros(vmax.shape, jnp.int32)
-
-    n_levels = v_ref.shape[-1]
-    level_ids = jax.lax.iota(jnp.int32, n_levels)
-
-    for fmt_bit, ti, nano_mode, emax, max_pos in cands:
-        e_shared = jnp.clip(_floor_log2_bits(vmax) - emax, -126, 127)
-        scale0 = pow2i(e_shared)
-        if nano_mode is None:
-            nano = jnp.zeros_like(e_shared)
-        elif nano_mode == "round":
-            r = vmax / (scale0 * np.float32(max_pos))
-            nano = jnp.clip(jnp.round((r - 1.0) * 4.0), 0, 3).astype(jnp.int32)
-        else:
-            nano = jnp.full_like(e_shared, int(nano_mode))
-        scale = scale0 * (1.0 + nano.astype(jnp.float32) * 0.25)
-        vp = xb * (1.0 / scale)[..., None]
-
-        # nearest-level snap == searchsorted(boundaries, vp, side='left')
-        idx = jnp.sum((vp[..., None] > b_ref[ti, :]).astype(jnp.int32),
-                      axis=-1)
-        onehot = idx[..., None] == level_ids
-        values = jnp.sum(onehot.astype(jnp.float32) * v_ref[ti, :], axis=-1)
-        codes = jnp.sum(onehot.astype(jnp.int32) * c_ref[ti, :], axis=-1)
-
-        deq = values * scale[..., None]
-        mse = jnp.mean(jnp.square(deq - xb), axis=-1)
-
-        take = mse < best_mse                               # strict: first wins
-        best_codes = jnp.where(take[..., None], codes, best_codes)
-        meta = (e_shared + _E_BIAS) | (nano << 8) | (fmt_bit << 10)
-        best_meta = jnp.where(take, meta, best_meta)
-        best_mse = jnp.where(take, mse, best_mse)
-
-    codes_ref[...] = best_codes
+    bits, block_size = fmt.bits, fmt.block_size
+    if bits == 8:
+        packed = best_codes
+    else:
+        # in-kernel sub-byte pack: shift each code to its in-byte offset,
+        # then route to byte slots with a constant (B, bpb) 0/1 matmul —
+        # disjoint bit-fields, so the f32 sum is an exact bitwise OR. No
+        # spill term: byte-aligned widths (4-bit) never straddle a byte.
+        # (Layout matches repro.core.pack.pack_layout; built with iota
+        # because Pallas kernels cannot capture array constants.)
+        bpb = block_size * bits // 8
+        off = (jax.lax.broadcasted_iota(jnp.int32, xb.shape, 1) * bits) % 8
+        shifted = (best_codes << off).astype(jnp.float32)
+        j = jax.lax.broadcasted_iota(jnp.int32, (block_size, bpb), 0)
+        b = jax.lax.broadcasted_iota(jnp.int32, (block_size, bpb), 1)
+        lo_route = ((j * bits) // 8 == b).astype(jnp.float32)
+        packed = jax.lax.dot(shifted, lo_route,
+                             preferred_element_type=jnp.float32
+                             ).astype(jnp.int32)
+    packed_ref[...] = packed.astype(jnp.uint8)
     meta_ref[...] = best_meta[:, None]
 
 
 @functools.partial(jax.jit, static_argnames=("fmt", "tile_rows", "interpret"))
-def nxfp_quantize_pallas(xb, fmt: BlockFormat, tile_rows: int = 256,
-                         interpret: bool = False):
-    """xb: (T, block_size) f32 blocks -> (codes int32 (T, B), meta int32 (T,)).
-
-    The wrapper in ops.py handles arbitrary shapes/axes and packing.
+def nxfp_quantize_pack_pallas(xb, fmt: BlockFormat, tile_rows: int = 256,
+                              interpret: bool = False):
+    """xb: (T, block_size) f32 blocks -> (packed uint8 (T, bpb), meta
+    uint16 (T,)) — fused Algorithm-1 encode + bit-pack, one HBM write of
+    ``bits/8`` bytes/element. The wrapper in ops.py handles arbitrary
+    shapes/axes.
     """
     t, b = xb.shape
     assert b == fmt.block_size
-    cands, bounds, values, codes_tab = _table_arrays(fmt)
+    assert fmt.bits in (4, 8), "fused kernel is byte-aligned only (4/8-bit)"
+    assert not fmt.cr or fmt.recycle == "half_smallest", fmt
+    bpb = bytes_per_block(b, fmt.bits)
     pad = (-t) % tile_rows
     if pad:
         xb = jnp.pad(xb, ((0, pad), (0, 0)))
     grid = ((t + pad) // tile_rows,)
-    full = lambda arr: pl.BlockSpec(arr.shape, lambda i: (0,) * arr.ndim)
-    codes, meta = pl.pallas_call(
-        functools.partial(_kernel, cands=cands),
+    packed, meta = pl.pallas_call(
+        functools.partial(_kernel, fmt=fmt),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tile_rows, b), lambda i: (i, 0)),
-            full(bounds), full(values), full(codes_tab),
-        ],
+        in_specs=[pl.BlockSpec((tile_rows, b), lambda i: (i, 0))],
         out_specs=[
-            pl.BlockSpec((tile_rows, b), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, bpb), lambda i: (i, 0)),
             pl.BlockSpec((tile_rows, 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((t + pad, b), jnp.int32),
+            jax.ShapeDtypeStruct((t + pad, bpb), jnp.uint8),
             jax.ShapeDtypeStruct((t + pad, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(xb.astype(jnp.float32), jnp.asarray(bounds), jnp.asarray(values),
-      jnp.asarray(codes_tab))
-    return codes[:t], meta[:t, 0]
+    )(xb.astype(jnp.float32))
+    return packed[:t], meta[:t, 0].astype(jnp.uint16)

@@ -17,14 +17,23 @@ import numpy as np
 
 from repro.core.formats import BlockFormat, get_format
 from repro.core.pack import pack_codes
-from repro.core.qtensor import QTensor
-from repro.core.quantize import quantize_blocks, to_blocks
+from repro.core.qtensor import QTensor, fmt_key
+from repro.core.quantize import (quantize_blocks, quantize_blocks_arith,
+                                 to_blocks)
 from . import ref as kref
 from .nxfp_attention import nxfp_decode_attention_pallas
 from .nxfp_matmul import nxfp_matmul_pallas
-from .nxfp_quantize import nxfp_quantize_pallas
+from .nxfp_quantize import nxfp_quantize_pack_pallas
 
 __all__ = ["qmatmul", "quantize_qtensor", "decode_attention"]
+
+# Encoder selector for quantize_qtensor (§Perf / DESIGN.md §2.5): "arith"
+# (default) = the fused pipeline — Pallas fused encode+pack where eligible,
+# else the O(1)-memory exponent/ulp encoder + shift-or pack. "reference"
+# = the FULL seed three-pass pipeline (searchsorted+take encode and
+# scatter-add repack, never the fused kernel) so perf_iter's
+# seed_quant/fused_quant A/B rows compare the real pre-ISSUE-1 baseline.
+XLA_QUANT_ENCODER = "arith"
 
 # Weight-stationary serving (§Perf): pin matmul activations replicated so
 # GSPMD partial-sums over the weights' FSDP ('data') dim instead of
@@ -95,23 +104,46 @@ def qmatmul(x, w, impl: Optional[str] = None):
     return y.reshape(*lead, n)
 
 
+def _arith_ok(fmt: BlockFormat) -> bool:
+    """Arithmetic encoders hard-code the default CR remap (DESIGN.md §2.3)."""
+    return not fmt.cr or fmt.recycle == "half_smallest"
+
+
 def quantize_qtensor(x, fmt, axis: int = -1,
                      impl: Optional[str] = None) -> QTensor:
-    """Quantize a dense array to a QTensor via the kernel or the reference."""
+    """Quantize a dense array to a QTensor — fused encode+pack hot path.
+
+    ``impl="pallas"`` (byte-aligned widths): one fused kernel emits packed
+    uint8 + uint16 meta directly — no int32 codes ever reach HBM and no
+    separate repack pass runs. Everything else (non-TPU backends, 5/6-bit
+    widths, custom recycle sweeps) takes the XLA path: the arithmetic
+    encoder + the gather/scatter-free shift-or pack.
+    """
     if isinstance(fmt, str):
         fmt = get_format(fmt)
     impl = _resolve(impl)
     axis = axis if axis < 0 else axis - x.ndim
     xb, orig = to_blocks(x, fmt.block_size, axis)
-    if impl == "pallas":
-        flat = xb.reshape(-1, fmt.block_size)
-        codes, meta = nxfp_quantize_pallas(flat.astype(jnp.float32), fmt,
-                                           interpret=_interpret())
-        codes = codes.reshape(xb.shape).astype(jnp.uint8)
-        meta = meta.reshape(xb.shape[:-1]).astype(jnp.uint16)
-    else:
+    key = fmt_key(fmt)
+    if XLA_QUANT_ENCODER == "reference":
+        # faithful seed pipeline for A/B rows: table-driven encode AND the
+        # scatter-add repack, bypassing the fused kernel on every backend
+        from repro.core.pack import pack_codes_scatter
         codes, meta = quantize_blocks(xb, fmt)
-    return QTensor(pack_codes(codes, fmt.bits), meta, fmt.name,
+        return QTensor(pack_codes_scatter(codes, fmt.bits), meta, key,
+                       tuple(x.shape), axis, orig)
+    if impl == "pallas" and fmt.bits in (4, 8) and _arith_ok(fmt):
+        flat = xb.reshape(-1, fmt.block_size)
+        packed, meta = nxfp_quantize_pack_pallas(
+            flat.astype(jnp.float32), fmt, interpret=_interpret())
+        packed = packed.reshape(*xb.shape[:-1], packed.shape[-1])
+        meta = meta.reshape(xb.shape[:-1])
+        return QTensor(packed, meta, key, tuple(x.shape), axis, orig)
+    if _arith_ok(fmt):
+        codes, meta = quantize_blocks_arith(xb, fmt)
+    else:  # custom recycle sweeps: table-driven encode, modern pack
+        codes, meta = quantize_blocks(xb, fmt)
+    return QTensor(pack_codes(codes, fmt.bits), meta, key,
                    tuple(x.shape), axis, orig)
 
 

@@ -5,6 +5,11 @@ The quantized cache is the paper's "weights AND KV cache" configuration
 packed byte buffers; decode attention dequantizes tiles on the fly
 (Pallas kernel on TPU, identical jnp path elsewhere).
 
+The cast sits on the decode critical path (it re-runs EVERY token), so it
+rides the fused encode+pack quantize pipeline: on TPU one Pallas kernel
+writes packed uint8 + uint16 meta straight into the cache layout below —
+no int32 code intermediate, no separate repack pass (DESIGN.md §2).
+
 Cache pytrees hold a leading stacked-layer axis consumed by lax.scan.
 """
 from __future__ import annotations
@@ -45,7 +50,12 @@ def ssm_cache_init(cfg: ModelConfig, n_layers: int, batch: int):
 
 
 def _quantize_kv(x, kv_fmt: str):
-    """(B, T, KVH, hd) -> (packed, meta) along head_dim blocks."""
+    """(B, T, KVH, hd) -> (packed, meta) along head_dim blocks.
+
+    quantize_qtensor's fused path emits exactly the (..., nb, bpb) uint8 +
+    (..., nb) uint16 buffers the cache stores — the QTensor here is a
+    zero-copy view, not a repack.
+    """
     qt = quantize_qtensor(x, kv_fmt, axis=-1)
     return qt.packed, qt.meta
 

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.qtensor import QuantPolicy, direct_cast_tree
+from repro.kernels.ops import quantize_qtensor
 from repro.models import decode_step, prefill
 from repro.models.common import ModelConfig
 
@@ -37,7 +38,11 @@ class ServeEngine:
         self.cfg = cfg
         self.policy = policy
         self.max_len = max_len
-        self.params = (direct_cast_tree(params, policy)
+        # load-time weight cast rides the fused encode+pack pipeline
+        # (Pallas on TPU, arithmetic XLA path elsewhere) — multi-GB
+        # checkpoints cast without the one-hot/int32 intermediates
+        self.params = (direct_cast_tree(params, policy,
+                                        quantize_fn=quantize_qtensor)
                        if policy.weight_fmt else params)
         kv = policy.kv_fmt
         self._prefill = jax.jit(

@@ -8,10 +8,12 @@ multi-pod mesh, so we direct-cast gradients to NxFP8 before crossing them.
 The per-pod gradient, its Algorithm-1 cast, the uint8 all_gather over the
 'pod' axis and the dequant-mean all live inside ONE ``shard_map`` whose
 'data'/'model' axes are left automatic — each pod computes gradients for
-its own batch shard, and only packed codes + 11-bit/block metadata cross
-the inter-pod links:
+its own batch shard, and only *bit-packed* codes + one uint16/block of
+metadata cross the inter-pod links (the seed pipeline gathered unpacked
+uint8 codes — a 2x wire regression for 4-bit formats):
 
-    wire bytes = (8 + 11/32) / 32 of f32 grads  (~3.83x less)
+    wire bits/value = bits + 16/block_size
+    nxfp8: 8.5/32 of f32 (~3.76x less);  nxfp4: 4.5/32 (~7.1x less)
 
 Falls back to a wire-format *simulation* (quantize->dequantize per pod-mean
 semantics, collective inserted by GSPMD on dense values) if this JAX
@@ -27,6 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.formats import get_format
+from repro.core.pack import pack_codes, unpack_codes
 from repro.core.quantize import quantize_blocks_arith
 
 # The codec used here must be (a) GATHER-FREE — XLA's PartitionGather
@@ -34,14 +37,22 @@ from repro.core.quantize import quantize_blocks_arith
 # 255-level one-hot matvec materializes ~256x the gradient bytes (observed
 # 15.8 TiB temp on starcoder train), and (c) LAYOUT-PRESERVING — a flatten
 # of a model-sharded leaf forces an all-gather of the whole gradient.
-# quantize_blocks_arith + the arithmetic field decoder satisfy all three;
-# blocks run along each leaf's last axis in its natural layout.
+# quantize_blocks_arith + the shift-or (matmul-routed, gather/scatter-free)
+# pack + the arithmetic field decoder satisfy all three; blocks run along
+# each leaf's last axis in its natural layout.
 
 _MIN_COMPRESS = 4096  # tiny leaves (norm scales) ride along in f32
 
+# Ship bit-packed codes over the pod links (ISSUE-1). False restores the
+# seed wire format (unpacked uint8 codes — 2x the bytes at 4-bit) for
+# perf_iter's seed_quant A/B row.
+WIRE_PACK = True
+
 
 def _leaf_roundtrip(g, fmt):
-    """g (..., n) -> (codes (..., nb, B) u8, meta (..., nb) u16, n)."""
+    """g (..., n) -> (wire codes u8, meta (..., nb) u16, n); wire is
+    (..., nb, bpb) bit-packed, or (..., nb, B) unpacked when WIRE_PACK
+    is off."""
     n = g.shape[-1]
     pad = (-n) % fmt.block_size
     x = g.astype(jnp.float32)
@@ -49,11 +60,15 @@ def _leaf_roundtrip(g, fmt):
         x = jnp.pad(x, [(0, 0)] * (g.ndim - 1) + [(0, pad)])
     xb = x.reshape(*x.shape[:-1], -1, fmt.block_size)
     codes, meta = quantize_blocks_arith(xb, fmt)
+    if WIRE_PACK:
+        codes = pack_codes(codes, fmt.bits)
     return codes, meta, n
 
 
-def _leaf_decode(codes, meta, n, shape, dtype, fmt):
+def _leaf_decode(wire, meta, n, shape, dtype, fmt):
     from repro.kernels.decode_lib import decode_block_values
+    codes = unpack_codes(wire, fmt.bits, fmt.block_size) if WIRE_PACK \
+        else wire
     deq = decode_block_values(codes.astype(jnp.int32),
                               meta.astype(jnp.int32), fmt)
     deq = deq.reshape(*deq.shape[:-2], -1)[..., :n]
@@ -109,11 +124,11 @@ def make_pod_grad_fn(grad_fn: Callable, mesh, fmt_name: str = "nxfp8"
         def leaf(x):
             if x.size < _MIN_COMPRESS:   # f32 wire for tiny leaves
                 return jnp.mean(jax.lax.all_gather(x, "pod"), axis=0)
-            codes, meta, n = _leaf_roundtrip(x, fmt)
-            codes_all = jax.lax.all_gather(codes, "pod")
+            packed, meta, n = _leaf_roundtrip(x, fmt)
+            packed_all = jax.lax.all_gather(packed, "pod")   # wire: bits/8 B/val
             meta_all = jax.lax.all_gather(meta, "pod")
             deq = jax.vmap(lambda c, m: _leaf_decode(
-                c, m, n, x.shape, jnp.float32, fmt))(codes_all, meta_all)
+                c, m, n, x.shape, jnp.float32, fmt))(packed_all, meta_all)
             return jnp.mean(deq, axis=0).astype(x.dtype)
 
         grads = jax.tree.map(leaf, grads)

@@ -1,0 +1,117 @@
+"""Minimal stand-in for the ``hypothesis`` API surface this suite uses.
+
+The CI/dev container bakes in the jax toolchain but not hypothesis; the
+seed suite could not even *collect* without it. conftest.py registers this
+module as ``hypothesis``/``hypothesis.strategies`` in sys.modules ONLY
+when the real package is missing, so environments with hypothesis
+installed keep the real shrinking/explore machinery.
+
+The fallback runs each ``@given`` test on a deterministic per-test
+pseudo-random sample (seeded from the test name), capped at a small
+example count to keep the tier-1 gate fast. It covers exactly the
+strategies the suite imports: floats / integers / lists / sampled_from /
+composite, plus ``settings`` and ``given``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+import random
+import sys
+import types
+
+_MAX_EXAMPLES_CAP = 15
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self.draw = draw_fn
+
+
+def floats(min_value=None, max_value=None, allow_nan=False,
+           allow_infinity=False, allow_subnormal=True, width=64):
+    lo = -math.inf if min_value is None else float(min_value)
+    hi = math.inf if max_value is None else float(max_value)
+    bound = max(abs(lo) if math.isfinite(lo) else 1e30,
+                abs(hi) if math.isfinite(hi) else 1e30)
+    log_hi = math.log10(bound) if bound > 0 else 0.0
+
+    def draw(rnd):
+        if rnd.random() < 0.05:
+            v = 0.0
+        else:
+            # log-uniform magnitude: exercises the full exponent range the
+            # shared-exponent codec cares about, not just O(1) magnitudes
+            mag = 10.0 ** rnd.uniform(-30.0, log_hi)
+            v = mag if rnd.random() < 0.5 else -mag
+        return min(max(v, lo), hi)
+
+    return _Strategy(draw)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def lists(elements, min_size=0, max_size=None):
+    mx = min_size if max_size is None else max_size
+
+    def draw(rnd):
+        n = rnd.randint(min_size, mx)
+        return [elements.draw(rnd) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rnd: seq[rnd.randrange(len(seq))])
+
+
+def composite(fn):
+    @functools.wraps(fn)
+    def make(*args, **kwargs):
+        return _Strategy(
+            lambda rnd: fn(lambda s: s.draw(rnd), *args, **kwargs))
+    return make
+
+
+def settings(max_examples=100, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_fallback_max_examples", 100),
+                    _MAX_EXAMPLES_CAP)
+            for i in range(n):
+                rnd = random.Random(f"{fn.__module__}.{fn.__name__}:{i}")
+                drawn = [s.draw(rnd) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+        # the drawn args are filled here, not by pytest: hide the wrapped
+        # signature so pytest doesn't resolve them as fixtures
+        import inspect
+        wrapper.__signature__ = inspect.Signature()
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def install():
+    """Register this module as ``hypothesis`` (+ ``.strategies``)."""
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("floats", "integers", "lists", "sampled_from", "composite"):
+        setattr(st, name, globals()[name])
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.__is_fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -4,6 +4,12 @@
 import numpy as np
 import pytest
 
+try:
+    import hypothesis  # noqa: F401  (real package preferred when present)
+except ImportError:
+    import _hypothesis_fallback
+    _hypothesis_fallback.install()
+
 
 @pytest.fixture
 def rng():
