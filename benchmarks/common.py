@@ -124,13 +124,19 @@ def model_weight_matrices(params, min_size: int = 4096):
 
 
 class Csv:
-    """Collects `name,us_per_call,derived` rows for benchmarks/run.py."""
+    """Collects `name,us_per_call,derived` rows for benchmarks/run.py.
+
+    ``unit`` names what the value column measures (most suites time one
+    call; serving rows record per-token cost) — it rides into the
+    BENCH_summary.json snapshot so cross-PR consumers never misread it.
+    """
 
     def __init__(self):
         self.rows = []
 
-    def add(self, name: str, us_per_call: float, derived: str):
-        self.rows.append((name, us_per_call, derived))
+    def add(self, name: str, us_per_call: float, derived: str,
+            unit: str = "us_per_call"):
+        self.rows.append((name, us_per_call, derived, unit))
         print(f"{name},{us_per_call:.2f},{derived}")
 
     def extend(self, other: "Csv"):

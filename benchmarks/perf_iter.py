@@ -132,6 +132,23 @@ def _seed_quant():
     return {}
 
 
+@variant("fused_quant4")
+def _fused_quant4():
+    """fused_quant with a 4-bit gradient wire. The pack's wire delta is
+    invisible at the default nxfp8 wire (8-bit codes are single bytes
+    packed or not — measured 0-byte delta, DESIGN.md §5); sub-byte widths
+    are where shipping packed codes halves the pod-link bytes."""
+    _fused_quant()
+    return {"grad_compress": "nxfp4"}
+
+
+@variant("seed_quant4")
+def _seed_quant4():
+    """seed_quant (unpacked uint8 wire) with a 4-bit gradient wire."""
+    _seed_quant()
+    return {"grad_compress": "nxfp4"}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)

@@ -1,22 +1,37 @@
-"""Benchmark runner — one entry per paper table/figure + kernels + roofline.
+"""Benchmark runner — one entry per paper table/figure + kernels + serving.
 
-Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+Prints ``name,us_per_call,derived`` CSV (one row per measurement) and
+writes a machine-readable ``BENCH_summary.json`` at the repo root
+(per-benchmark key -> {value, unit, variant}) so the perf trajectory is
+comparable across PRs; CI uploads it as an artifact.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only fig8,table1
-  PYTHONPATH=src python -m benchmarks.run --quick --only kernels  # CI smoke
+  PYTHONPATH=src python -m benchmarks.run --quick --only kernels,serving
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import traceback
+from pathlib import Path
 
 from .common import Csv
 
 _SUITES = ["fig3", "fig8", "table1", "fig9", "fig10", "fig11", "fig12",
-           "kernels", "roofline"]
+           "kernels", "serving", "roofline"]
+
+SUMMARY_PATH = Path(__file__).resolve().parents[1] / "BENCH_summary.json"
+
+
+def write_summary(csv: Csv, path: Path = SUMMARY_PATH) -> None:
+    """Snapshot the collected rows as {name: {value, unit, variant}}."""
+    summary = {name: {"value": us, "unit": unit, "variant": derived}
+               for name, us, derived, unit in csv.rows}
+    path.write_text(json.dumps(summary, indent=1, sort_keys=True) + "\n")
+    print(f"[run] wrote {len(summary)} rows to {path}", file=sys.stderr)
 
 
 def main() -> None:
@@ -52,6 +67,8 @@ def main() -> None:
                 from . import fig12_blocksize as m
             elif suite == "kernels":
                 from . import kernels_bench as m
+            elif suite == "serving":
+                from . import serving_bench as m
             elif suite == "roofline":
                 from . import roofline as m
                 m.main(csv)
@@ -62,6 +79,7 @@ def main() -> None:
         except Exception as e:  # keep going; report at the end
             failures.append((suite, repr(e)))
             traceback.print_exc()
+    write_summary(csv)
     if failures:
         print(f"FAILED suites: {failures}", file=sys.stderr)
         raise SystemExit(1)

@@ -15,10 +15,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import BlockFormat, ELEMENT_FORMATS
+from repro.core.pack import pack_tile
 from repro.core.quantize import pow2i  # canonical definition (re-export)
 
 __all__ = ["pow2i", "decode_elem", "decode_scale", "decode_block_values",
-           "unpack_codes_pallas"]
+           "byte_routes", "unpack_codes_pallas"]
 
 
 def decode_elem(codes, elem_name: str, cr: bool):
@@ -77,11 +78,37 @@ def decode_block_values(codes, meta, fmt: BlockFormat):
     return vals * scale[..., None]
 
 
-def unpack_codes_pallas(packed, bits: int):
-    """(..., nb, bpb) uint8 -> (..., nb, B) int32 codes. k in {4, 8} only.
+def byte_routes(n_codes: int, bits: int, n_bytes: int, code_axis: int):
+    """Iota-built 0/1 lo/spill byte-routing constants (core.pack layout).
 
-    Restricted to byte-aligned widths so the unpack is a pure vector op
-    (no gathers) inside Mosaic; 5/6-bit formats take the XLA path.
+    (Pallas kernels cannot capture array constants, so the routes are
+    rebuilt from ``broadcasted_iota`` comparisons — XLA folds them.)
+    ``code_axis=0`` -> (n_codes, n_bytes), the pack orientation;
+    ``code_axis=1`` -> (n_bytes, n_codes), the unpack orientation — each
+    built directly so Mosaic never sees a transpose op. The lo route
+    selects code i's low byte, the spill route its high byte, clamped to
+    the last byte when there is no spill (the clamped byte's contribution
+    is zero on the pack side and masked off on the unpack side, as in
+    ``core.pack``).
+    """
+    shape = (n_codes, n_bytes) if code_axis == 0 else (n_bytes, n_codes)
+    i = jax.lax.broadcasted_iota(jnp.int32, shape, code_axis)
+    b = jax.lax.broadcasted_iota(jnp.int32, shape, 1 - code_axis)
+    lo = (i * bits) // 8
+    hi = jnp.minimum(lo + 1, n_bytes - 1)
+    return (b == lo).astype(jnp.float32), (b == hi).astype(jnp.float32)
+
+
+def unpack_codes_pallas(packed, bits: int):
+    """(..., nb, bpb) uint8 -> (..., nb, B) int32 codes. k in {4, 5, 6, 8}.
+
+    4/8-bit codes never straddle a byte, so the unpack is pure vector
+    shifts. 5/6-bit codes do straddle: the unpack runs over the two-block
+    (64-code, 40/48-byte) pack tile (``core.pack.pack_tile``) as a pair of
+    tiny constant 0/1 byte-selection matmuls — the transposed shift-or
+    routing of ``core.pack.unpack_codes`` — plus vector shift/mask. Still
+    no gathers, so it is legal and fast inside Mosaic. Callers must pass
+    an even number of blocks for 5/6-bit (ops.py gates eligibility).
     """
     b = packed.astype(jnp.int32)
     if bits == 8:
@@ -91,4 +118,21 @@ def unpack_codes_pallas(packed, bits: int):
         hi = (b >> 4) & 0xF
         out = jnp.stack([lo, hi], axis=-1)
         return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
-    raise NotImplementedError(f"pallas unpack supports 4/8-bit, got {bits}")
+    if bits in (5, 6):
+        nb, bpb = packed.shape[-2], packed.shape[-1]
+        assert nb % 2 == 0, (
+            f"{bits}-bit unpack consumes two-block pack tiles; got {nb} blocks")
+        block = bpb * 8 // bits
+        n_codes, n_bytes = pack_tile(bits, block)
+        rows = packed.astype(jnp.float32).reshape(-1, n_bytes)
+        lo_sel, hi_sel = byte_routes(n_codes, bits, n_bytes, code_axis=1)
+        # routes are one-hot per code: the f32 dots are exact byte selects
+        lo_b = jax.lax.dot(rows, lo_sel,
+                           preferred_element_type=jnp.float32).astype(jnp.int32)
+        hi_b = jax.lax.dot(rows, hi_sel,
+                           preferred_element_type=jnp.float32).astype(jnp.int32)
+        word = lo_b | (hi_b << 8)
+        off = (jax.lax.broadcasted_iota(jnp.int32, word.shape, 1) * bits) % 8
+        codes = (word >> off) & ((1 << bits) - 1)
+        return codes.reshape(*packed.shape[:-2], nb, block)
+    raise NotImplementedError(f"pallas unpack supports 4/5/6/8-bit, got {bits}")

@@ -91,6 +91,8 @@ def nxfp_decode_attention_pallas(q, k_packed, k_meta, v_packed, v_meta,
     bb, s, kvh2, nb, bpb = k_packed.shape
     assert (bb, kvh2) == (b, kvh) and nb * fmt.block_size == d
     assert s % tile_s == 0, (s, tile_s)
+    # 5/6-bit dequant consumes two-block pack tiles along head_dim
+    assert fmt.bits in (4, 8) or nb % 2 == 0, (fmt.bits, nb)
 
     grid = (b, kvh, s // tile_s)
     kv_spec = pl.BlockSpec((1, tile_s, 1, nb, bpb),

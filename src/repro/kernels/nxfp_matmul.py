@@ -89,6 +89,9 @@ def nxfp_matmul_pallas(x, packed, meta, fmt: BlockFormat,
         x = jnp.pad(x, ((0, pad_m), (0, 0)))
     assert k_dim % tile_k == 0 and n % tile_n == 0, (x.shape, n, tile_k, tile_n)
     kb_t = tile_k // fmt.block_size
+    # 5/6-bit dequant consumes two-block (64-code) pack tiles: every K tile
+    # must hold an even number of quantization blocks (ops.py picks tiles)
+    assert fmt.bits in (4, 8) or kb_t % 2 == 0, (fmt.bits, tile_k)
 
     grid = ((m + pad_m) // tile_m, n // tile_n, k_dim // tile_k)
     out = pl.pallas_call(

@@ -20,11 +20,14 @@ HBM -> separate XLA repack), this kernel eliminates:
     HBM write reduction at 4/8 bit before even counting the repack pass
     it replaces.
 
-Byte-aligned element widths only (4/8-bit: a code never straddles bytes);
-5/6-bit formats take the XLA arithmetic fallback in ops.py. Used on TPU
-for runtime casts that sit on the critical path: per-step KV cache
-quantization and NxFP gradient compression before the pod-axis
-all-reduce.
+Element widths 4/5/6/8. 4/8-bit codes pack with a single routing matmul
+(never straddle a byte); 5/6-bit codes straddle, so they pack over the
+two-block (64-code, 40/48-byte) tile of ``core.pack.pack_tile`` with the
+low/spill routing pair — same layout, still scatter-free (DESIGN.md
+§2.4). 3-bit and custom-recycle sweeps take the XLA arithmetic fallback
+in ops.py. Used on TPU for runtime casts that sit on the critical path:
+per-step KV cache quantization and NxFP gradient compression before the
+pod-axis all-reduce.
 """
 from __future__ import annotations
 
@@ -35,8 +38,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.formats import BlockFormat
-from repro.core.pack import bytes_per_block
+from repro.core.pack import bytes_per_block, pack_tile
 from repro.core.quantize import arith_encode_blocks
+from .decode_lib import byte_routes
 
 __all__ = ["nxfp_quantize_pack_pallas"]
 
@@ -46,24 +50,40 @@ def _kernel(x_ref, packed_ref, meta_ref, *, fmt: BlockFormat):
     best_codes, best_meta = arith_encode_blocks(xb, fmt)
 
     bits, block_size = fmt.bits, fmt.block_size
+    bpb = block_size * bits // 8
     if bits == 8:
         packed = best_codes
-    else:
+    elif bits == 4:
         # in-kernel sub-byte pack: shift each code to its in-byte offset,
         # then route to byte slots with a constant (B, bpb) 0/1 matmul —
         # disjoint bit-fields, so the f32 sum is an exact bitwise OR. No
         # spill term: byte-aligned widths (4-bit) never straddle a byte.
-        # (Layout matches repro.core.pack.pack_layout; built with iota
-        # because Pallas kernels cannot capture array constants.)
-        bpb = block_size * bits // 8
         off = (jax.lax.broadcasted_iota(jnp.int32, xb.shape, 1) * bits) % 8
         shifted = (best_codes << off).astype(jnp.float32)
-        j = jax.lax.broadcasted_iota(jnp.int32, (block_size, bpb), 0)
-        b = jax.lax.broadcasted_iota(jnp.int32, (block_size, bpb), 1)
-        lo_route = ((j * bits) // 8 == b).astype(jnp.float32)
+        lo_route, _ = byte_routes(block_size, bits, bpb, code_axis=0)
         packed = jax.lax.dot(shifted, lo_route,
                              preferred_element_type=jnp.float32
                              ).astype(jnp.int32)
+    else:
+        # 5/6-bit: codes straddle bytes, so the pack runs over the
+        # two-block (64-code, 40/48-byte) tile (core.pack.pack_tile) with
+        # the spill routing term of core.pack.pack_layout: each code
+        # contributes (code << off) & 0xFF to its low byte and
+        # (code << off) >> 8 to the next. Pairing adjacent rows (blocks)
+        # is layout-neutral — block_size*bits is a whole number of bytes,
+        # so the two-block little-endian layout is exactly the
+        # concatenation of the per-block layouts.
+        rows = best_codes.shape[0]
+        n_codes, n_bytes = pack_tile(bits, block_size)
+        c2 = best_codes.reshape(rows // 2, n_codes)
+        off = (jax.lax.broadcasted_iota(jnp.int32, c2.shape, 1) * bits) % 8
+        shifted = c2 << off
+        lo_route, hi_route = byte_routes(n_codes, bits, n_bytes, code_axis=0)
+        packed = (jax.lax.dot((shifted & 0xFF).astype(jnp.float32), lo_route,
+                              preferred_element_type=jnp.float32) +
+                  jax.lax.dot((shifted >> 8).astype(jnp.float32), hi_route,
+                              preferred_element_type=jnp.float32)
+                  ).astype(jnp.int32).reshape(rows, bpb)
     packed_ref[...] = packed.astype(jnp.uint8)
     meta_ref[...] = best_meta[:, None]
 
@@ -78,7 +98,9 @@ def nxfp_quantize_pack_pallas(xb, fmt: BlockFormat, tile_rows: int = 256,
     """
     t, b = xb.shape
     assert b == fmt.block_size
-    assert fmt.bits in (4, 8), "fused kernel is byte-aligned only (4/8-bit)"
+    assert fmt.bits in (4, 5, 6, 8), fmt
+    # 5/6-bit packs over two-block tiles: row pairs must not cross a grid tile
+    assert fmt.bits in (4, 8) or tile_rows % 2 == 0, (fmt.bits, tile_rows)
     assert not fmt.cr or fmt.recycle == "half_smallest", fmt
     bpb = bytes_per_block(b, fmt.bits)
     pad = (-t) % tile_rows

@@ -57,6 +57,23 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# Pallas-eligible element widths (DESIGN.md §2.5): 4/8-bit pack per block;
+# 5/6-bit pack/unpack over the two-block (64-code, 40/48-byte) tile.
+_KERNEL_BITS = (4, 5, 6, 8)
+
+
+def _tile_ok(fmt: BlockFormat, n_blocks: int) -> bool:
+    """Can the dequant kernels consume this packed block count?
+
+    5/6-bit kernels read two-block (64-code) pack tiles, so the packed
+    block count along the quantized axis must be even; odd counts take
+    the XLA path.
+    """
+    if fmt.bits in (4, 8):
+        return True
+    return fmt.bits in (5, 6) and n_blocks % 2 == 0
+
+
 def _pick_tile(dim: int, prefs=(512, 256, 128, 64, 32)) -> Optional[int]:
     for t in prefs:
         if dim % t == 0:
@@ -91,8 +108,12 @@ def qmatmul(x, w, impl: Optional[str] = None):
     if x2.shape[-1] < k_pad:  # quantization padded K to a block multiple
         x2 = jnp.pad(x2, ((0, 0), (0, k_pad - x2.shape[-1])))
 
-    if impl == "pallas" and w.fmt.bits in (4, 8):
-        tk = _pick_tile(k_pad)
+    if impl == "pallas" and w.fmt.bits in _KERNEL_BITS and _tile_ok(w.fmt, kb):
+        # 5/6-bit K tiles must hold two-block pack tiles (an even number of
+        # quantization blocks)
+        two = 2 * w.fmt.block_size
+        tk = _pick_tile(k_pad) if w.fmt.bits in (4, 8) else _pick_tile(
+            k_pad, tuple(t for t in (512, 256, 128, 64, 32) if t % two == 0))
         tn = _pick_tile(n, (256, 128, 64, 32, 16, 8))
         if tk and tn:
             tm = _pick_tile(max(x2.shape[0], 1), (256, 128, 64, 32, 16, 8, 1))
@@ -113,11 +134,12 @@ def quantize_qtensor(x, fmt, axis: int = -1,
                      impl: Optional[str] = None) -> QTensor:
     """Quantize a dense array to a QTensor — fused encode+pack hot path.
 
-    ``impl="pallas"`` (byte-aligned widths): one fused kernel emits packed
-    uint8 + uint16 meta directly — no int32 codes ever reach HBM and no
-    separate repack pass runs. Everything else (non-TPU backends, 5/6-bit
-    widths, custom recycle sweeps) takes the XLA path: the arithmetic
-    encoder + the gather/scatter-free shift-or pack.
+    ``impl="pallas"`` (4/5/6/8-bit): one fused kernel emits packed uint8 +
+    uint16 meta directly — no int32 codes ever reach HBM and no separate
+    repack pass runs (5/6-bit packs over the two-block tile, §2.4).
+    Everything else (non-TPU backends, 3-bit, custom recycle sweeps) takes
+    the XLA path: the arithmetic encoder + the gather/scatter-free
+    shift-or pack.
     """
     if isinstance(fmt, str):
         fmt = get_format(fmt)
@@ -132,7 +154,7 @@ def quantize_qtensor(x, fmt, axis: int = -1,
         codes, meta = quantize_blocks(xb, fmt)
         return QTensor(pack_codes_scatter(codes, fmt.bits), meta, key,
                        tuple(x.shape), axis, orig)
-    if impl == "pallas" and fmt.bits in (4, 8) and _arith_ok(fmt):
+    if impl == "pallas" and fmt.bits in _KERNEL_BITS and _arith_ok(fmt):
         flat = xb.reshape(-1, fmt.block_size)
         packed, meta = nxfp_quantize_pack_pallas(
             flat.astype(jnp.float32), fmt, interpret=_interpret())
@@ -168,7 +190,8 @@ def decode_attention(q, kq: QTensor, vq: QTensor, lengths, n_kv_heads: int,
     d_pad = kq.packed.shape[-2] * fmt.block_size
     if d_pad != d:
         qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, d_pad - d)))
-    if impl == "pallas" and fmt.bits in (4, 8):
+    if impl == "pallas" and fmt.bits in _KERNEL_BITS and \
+            _tile_ok(fmt, kq.packed.shape[-2]):
         s = kq.packed.shape[1]
         ts = _pick_tile(s, (512, 256, 128, 64, 32, 16, 8, 1))
         out = nxfp_decode_attention_pallas(

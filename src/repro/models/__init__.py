@@ -1,7 +1,7 @@
 """Model zoo: one config type, six architecture families, pure JAX."""
 from .common import ModelConfig
-from .lm import (decode_step, forward_train, init_cache_specs, init_params,
-                 loss_fn, prefill)
+from .lm import (decode_loop, decode_step, forward_train, init_cache_specs,
+                 init_params, loss_fn, prefill)
 
 __all__ = ["ModelConfig", "init_params", "forward_train", "loss_fn",
-           "prefill", "decode_step", "init_cache_specs"]
+           "prefill", "decode_step", "decode_loop", "init_cache_specs"]

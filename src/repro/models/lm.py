@@ -278,6 +278,37 @@ def decode_step(cfg: ModelConfig, params: Params, tokens, cache,
     return logits[:, 0], new_cache
 
 
+def decode_loop(cfg: ModelConfig, params: Params, tok, cache, n_steps: int,
+                kv_fmt: Optional[str], sample_fn, key):
+    """Run ``n_steps`` decode steps as ONE on-device ``lax.scan``.
+
+    The serving hot loop (DESIGN.md §7): the KV cache, logits and sampled
+    tokens never leave the device; the host dispatches once per chunk
+    instead of once per token.
+
+    ``tok`` (B,) int32 is the token entering the loop (already sampled
+    from the previous logits). Each step records it, advances the model,
+    and samples the successor with ``sample_fn(logits (B, V) f32, subkey)
+    -> (B,) int32``. The PRNG key is split once per step regardless of
+    sampler, so the key stream is invariant to chunking AND matches the
+    host loop's per-token ``jax.random.split``.
+
+    Returns ``(tokens (B, n_steps), tok, cache, key)`` — the emitted
+    tokens start with the entering token; the returned ``tok`` enters the
+    next chunk.
+    """
+    def step(carry, _):
+        t, c, k = carry
+        k, sub = jax.random.split(k)
+        logits, c = decode_step(cfg, params, t[:, None], c, kv_fmt)
+        nxt = sample_fn(logits, sub).astype(jnp.int32)
+        return (nxt, c, k), t
+
+    (tok, cache, key), toks = jax.lax.scan(
+        step, (tok, cache, key), None, length=n_steps)
+    return toks.T, tok, cache, key
+
+
 def init_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
                      kv_fmt: Optional[str]):
     """Abstract cache (ShapeDtypeStructs) for decode-only dry-run lowering."""

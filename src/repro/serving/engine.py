@@ -6,10 +6,21 @@ token, and every matmul dequantizes on the fly (Pallas kernel on TPU,
 identical jnp path elsewhere). The engine serves fixed-size batches with
 greedy/temperature sampling, per-sequence stop handling, and a step-time
 watchdog (straggler telemetry).
+
+Decode runs as an ON-DEVICE chunked loop (DESIGN.md §7): a jitted
+``lax.scan`` advances ``chunk`` tokens per dispatch — sampling, stop-token
+masking and ``n_generated`` accounting all on device — so the host pays
+one dispatch + one device→host copy per chunk instead of per token, and
+the KV cache, logits and sampled tokens stay resident in HBM. The
+per-token host loop survives as ``loop="host"`` — the dispatch-bound
+baseline for benchmarks and the bit-equality oracle for tests (greedy
+decoding is bit-identical between the two by construction: same ops,
+same order, same PRNG splits).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Dict, List, Optional
 
@@ -19,7 +30,7 @@ import numpy as np
 
 from repro.core.qtensor import QuantPolicy, direct_cast_tree
 from repro.kernels.ops import quantize_qtensor
-from repro.models import decode_step, prefill
+from repro.models import decode_loop, decode_step, prefill
 from repro.models.common import ModelConfig
 
 
@@ -29,7 +40,24 @@ class GenerationResult:
     n_generated: np.ndarray     # (B,)
     prefill_seconds: float
     decode_seconds: float
-    step_times: List[float]
+    step_times: List[float]     # host loop: per token; device loop: per chunk
+
+
+# advance a PRNG key by n chain splits (k -> split(k)[0]) in ONE dispatch
+# (n is traced; a host-side split loop would reintroduce per-token dispatch
+# on the sampled early-stop path _sync_key handles)
+_advance_key = jax.jit(lambda key, n: jax.lax.fori_loop(
+    0, n, lambda _, k: jax.random.split(k)[0], key))
+
+
+def _watchdog(times: List[float], unit: str):
+    """Straggler telemetry: flag dispatches > 3x median (host-side)."""
+    if len(times) > 4:
+        med = float(np.median(times))
+        slow = [i for i, s in enumerate(times) if s > 3 * med]
+        if slow:
+            print(f"[watchdog] {len(slow)} slow decode {unit}s "
+                  f"(>{3 * med * 1e3:.1f} ms): {slow[:8]}")
 
 
 class ServeEngine:
@@ -49,6 +77,12 @@ class ServeEngine:
             lambda p, b: prefill(cfg, p, b, max_len=max_len, kv_fmt=kv))
         self._decode = jax.jit(
             lambda p, t, c: decode_step(cfg, p, t, c, kv_fmt=kv))
+        # temperature/stop_token are traced (greedy-ness is the only
+        # sampling branch), so serving mixed per-request temperatures or
+        # stop ids never recompiles — only a new scan length does
+        self._chunk = jax.jit(
+            functools.partial(self._chunk_fn, cfg=cfg, kv_fmt=kv),
+            static_argnames=("n_steps", "greedy"))
         self._key = jax.random.PRNGKey(rng_seed)
 
     def _sample(self, logits, temperature: float):
@@ -57,9 +91,123 @@ class ServeEngine:
         self._key, sub = jax.random.split(self._key)
         return jax.random.categorical(sub, logits / temperature, axis=-1)
 
+    # -- on-device chunked decode (DESIGN.md §7) ----------------------------
+
+    @staticmethod
+    def _chunk_fn(params, tok, cache, key, done, n_gen, temperature, stop,
+                  *, cfg, kv_fmt, n_steps: int, greedy: bool):
+        """One dispatch = ``n_steps`` decode steps, fully on device.
+
+        Replays the host loop's per-token semantics exactly, but
+        vectorized over the chunk: step i emits ``tok_i`` masked by
+        "done before step i" (done at entry OR a stop token strictly
+        earlier in the chunk), counts it into ``n_gen`` under the same
+        mask, then marks stop hits done. Sequences that finish mid-chunk
+        keep decoding (as the host loop does until ``done.all()``) — their
+        emissions are masked to 0 and their counters frozen, so results
+        are bit-identical at any chunk size.
+
+        ``stop`` is a traced int32 scalar; -1 (no valid token id) means
+        no stop token.
+        """
+        def sample(logits, sub):
+            if greedy:
+                return jnp.argmax(logits, axis=-1)
+            return jax.random.categorical(sub, logits / temperature, axis=-1)
+
+        toks, tok, cache, key = decode_loop(
+            cfg, params, tok, cache, n_steps, kv_fmt, sample, key)
+
+        hits = toks == stop                                 # stop<0: never
+        before = jnp.cumsum(hits.astype(jnp.int32), axis=1) \
+            - hits.astype(jnp.int32)                       # stops before i
+        done_before = done[:, None] | (before > 0)          # (B, n_steps)
+        emitted = jnp.where(done_before, 0, toks)
+        n_gen = n_gen + jnp.sum(~done_before, axis=1).astype(jnp.int32)
+        done = done | jnp.any(hits, axis=1)
+        return emitted, tok, cache, key, done, n_gen
+
     def generate(self, batch: Dict[str, Any], max_new: int,
                  temperature: float = 0.0,
-                 stop_token: Optional[int] = None) -> GenerationResult:
+                 stop_token: Optional[int] = None,
+                 loop: str = "device", chunk: int = 32) -> GenerationResult:
+        """Generate ``max_new`` tokens per sequence.
+
+        ``loop="device"`` (default): chunked on-device ``lax.scan`` —
+        one jit dispatch and one device→host copy per ``chunk`` tokens;
+        host-side early exit and the straggler watchdog operate at chunk
+        granularity. ``loop="host"``: the per-token host loop (one
+        dispatch + sync per token) kept as the dispatch-bound baseline
+        and bit-equality oracle.
+
+        Compile caching is per distinct scan length: a ``max_new`` that is
+        not a chunk multiple compiles one extra trailing-chunk program
+        (``max_new % chunk``), cached thereafter — serve with chunk
+        multiples when ``max_new`` varies a lot across requests.
+        """
+        if loop == "host":
+            return self._generate_host(batch, max_new, temperature,
+                                       stop_token)
+        assert loop == "device", loop
+        assert chunk >= 1, chunk
+        t0 = time.time()
+        logits, cache = self._prefill(self.params, batch)
+        logits.block_until_ready()
+        t1 = time.time()
+
+        b = batch["tokens"].shape[0]
+        out = np.zeros((b, max_new), np.int32)
+        tok = self._sample(logits, temperature).astype(jnp.int32)
+        key = self._key          # threaded on device; synced back below
+        done = jnp.zeros((b,), bool)
+        n_gen = jnp.zeros((b,), jnp.int32)
+        temp = jnp.float32(temperature if temperature != 0.0 else 1.0)
+        stop = jnp.int32(-1 if stop_token is None else stop_token)
+        chunk_times: List[float] = []
+        i = 0
+        while i < max_new:
+            c = min(chunk, max_new - i)
+            ts = time.time()
+            emitted, tok, cache, key, done, n_gen = self._chunk(
+                self.params, tok, cache, key, done, n_gen, temp, stop,
+                n_steps=c, greedy=(temperature == 0.0))
+            out[:, i:i + c] = np.asarray(emitted)   # one copy per chunk
+            chunk_times.append(time.time() - ts)
+            i += c
+            if stop_token is not None and bool(np.asarray(done).all()):
+                break
+        if temperature != 0.0:
+            self._sync_key(key, np.asarray(n_gen), out, i, max_new,
+                           stop_token)
+        t2 = time.time()
+        _watchdog(chunk_times, "chunk")
+        return GenerationResult(out, np.asarray(n_gen), t1 - t0, t2 - t1,
+                                chunk_times)
+
+    def _sync_key(self, device_key, n_gen, out, steps_ran: int,
+                  max_new: int, stop_token: Optional[int]):
+        """Advance ``self._key`` by the HOST loop's split count, so RNG
+        state after a sampled call is loop-mode independent (subsequent
+        sampled calls match across ``loop=`` modes too). The host loop
+        stops splitting at ``done.all()``; the device loop always finishes
+        its chunk, so after an early stop its returned key (one split per
+        step ran) is ahead of the host oracle's.
+        """
+        splits = max_new
+        if stop_token is not None and max_new > 0:
+            last = out[np.arange(out.shape[0]), n_gen - 1]
+            if (last == stop_token).all():       # host broke at done.all()
+                splits = int(n_gen.max()) - 1
+        if splits == steps_ran:
+            self._key = device_key               # same chain, same count
+        else:
+            self._key = _advance_key(self._key, splits)
+
+    # -- per-token host loop (seed baseline / bit-equality oracle) ----------
+
+    def _generate_host(self, batch: Dict[str, Any], max_new: int,
+                       temperature: float = 0.0,
+                       stop_token: Optional[int] = None) -> GenerationResult:
         t0 = time.time()
         logits, cache = self._prefill(self.params, batch)
         logits.block_until_ready()
@@ -84,13 +232,7 @@ class ServeEngine:
             tok.block_until_ready()
             step_times.append(time.time() - ts)
         t2 = time.time()
-        # straggler telemetry: flag steps > 3x median (host-side watchdog)
-        if len(step_times) > 4:
-            med = float(np.median(step_times))
-            slow = [i for i, s in enumerate(step_times) if s > 3 * med]
-            if slow:
-                print(f"[watchdog] {len(slow)} slow decode steps "
-                      f"(>{3 * med * 1e3:.1f} ms): {slow[:8]}")
+        _watchdog(step_times, "step")
         return GenerationResult(out, n_gen, t1 - t0, t2 - t1, step_times)
 
     def weights_footprint_bytes(self) -> int:

@@ -88,15 +88,26 @@ def simulate_compress(grads, fmt_name: str = "nxfp8"):
     return jax.tree.map(leaf, grads)
 
 
+# Try the in-graph packed-wire shard_map at all? On CPU builds the SPMD
+# partitioner hard-ABORTS (CHECK `target.IsManualSubgroup() ==
+# sharding().IsManualSubgroup()`, not a catchable exception) on ANY
+# partial-auto shard_map — measured in the ISSUE-2 multipod A/B, DESIGN.md
+# §5 — so dry-run containers must take the simulated wire. Real pods are
+# TPU; first TPU run should flip this on and validate (ROADMAP).
+SHARD_MAP_WIRE_BACKENDS = ("tpu",)
+
+
 def _shard_map_auto(body, mesh, in_specs, out_specs):
     """Partial-manual shard_map (manual over 'pod', rest automatic) across
     JAX API generations: new API takes the *manual* axis set via
     ``axis_names``; older ones take the complement via ``auto``."""
     try:
+        # AttributeError too: jax<0.5 has no jax.shard_map, and letting it
+        # escape silently demoted capable builds to the simulated wire
         return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, axis_names={"pod"},
                              check_vma=False)
-    except TypeError:
+    except (TypeError, AttributeError):
         from jax.experimental.shard_map import shard_map
         auto = frozenset(n for n in mesh.axis_names if n != "pod")
         return shard_map(body, mesh=mesh, in_specs=in_specs,
@@ -113,6 +124,7 @@ def make_pod_grad_fn(grad_fn: Callable, mesh, fmt_name: str = "nxfp8"
     if "pod" not in mesh.axis_names:
         return grad_fn, "single_pod"
     fmt = get_format(fmt_name)
+    shard_map_ok = jax.default_backend() in SHARD_MAP_WIRE_BACKENDS
 
     def body(params, batch):
         # inside the pod-manual region only 'data' is automatic: narrow the
@@ -137,6 +149,10 @@ def make_pod_grad_fn(grad_fn: Callable, mesh, fmt_name: str = "nxfp8"
         return aux, grads
 
     try:
+        if not shard_map_ok:
+            raise NotImplementedError(
+                f"packed-wire shard_map disabled on "
+                f"{jax.default_backend()!r} (SHARD_MAP_WIRE_BACKENDS)")
         batch_spec = P("pod")
         wrapped = _shard_map_auto(
             body, mesh,

@@ -23,12 +23,13 @@ from repro.kernels.nxfp_quantize import nxfp_quantize_pack_pallas
 from repro.kernels.ops import quantize_qtensor
 
 # every registered format family x width this repo exercises; 4/8-bit run
-# the fused Pallas kernel, 3/5/6-bit the XLA arithmetic fallback
+# the fused Pallas kernel per block, 5/6-bit over the two-block (64-code)
+# pack tile (ISSUE-2), 3-bit the XLA arithmetic fallback
 REGISTRY = ["bfp4", "bfp4_cr", "mxfp4", "mxfp4_cr", "nxfp4", "nxfp4_nm",
             "nxfp4_nm_am", "nxfp4_bs16", "nxfp8", "mxfp8", "bfp8",
             "mxfp3", "nxfp5", "mxfp5", "nxfp6", "mxfp6", "mxfp6_e3m2"]
-KERNEL_FMTS = [f for f in REGISTRY if get_format(f).bits in (4, 8)]
-FALLBACK_FMTS = [f for f in REGISTRY if get_format(f).bits not in (4, 8)]
+KERNEL_FMTS = [f for f in REGISTRY if get_format(f).bits in (4, 5, 6, 8)]
+FALLBACK_FMTS = [f for f in REGISTRY if get_format(f).bits not in (4, 5, 6, 8)]
 
 
 def _edge_blocks(rng, fmt):
@@ -87,8 +88,8 @@ def test_arith_matches_searchsorted_reference(rng, fname):
 
 @pytest.mark.parametrize("fname", FALLBACK_FMTS)
 def test_xla_fallback_widths_roundtrip(rng, fname):
-    """5/6-bit widths can't run the byte-aligned fused kernel; the wrapper
-    must fall back to arith encode + shift-or pack with exact results."""
+    """Widths outside the kernel set (3-bit, now that 5/6-bit ride the
+    two-block tile) fall back to arith encode + shift-or pack, exactly."""
     fmt = get_format(fname)
     x = (rng.standard_normal((64, 96)) * 3).astype(np.float32)
     qt = quantize_qtensor(jnp.asarray(x), fname, axis=-1, impl="pallas")
@@ -197,7 +198,7 @@ def test_qtensor_roundtrip_through_fused_path(rng):
     """End-to-end: fused-path QTensor dequantizes identically to the
     XLA-path QTensor (packed layout and semantics unchanged)."""
     x = rng.standard_normal((40, 130)).astype(np.float32)  # pads to blocks
-    for fname in ["nxfp4", "nxfp8"]:
+    for fname in ["nxfp4", "nxfp5", "nxfp6", "nxfp8"]:
         a = quantize_qtensor(jnp.asarray(x), fname, axis=-1, impl="pallas")
         b = quantize_qtensor(jnp.asarray(x), fname, axis=-1, impl="xla")
         np.testing.assert_array_equal(np.asarray(a.packed),

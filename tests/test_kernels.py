@@ -72,6 +72,63 @@ def test_decode_attention_sweep(rng, fname, bshkd):
                                rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("fname", ["nxfp5", "mxfp5", "nxfp6", "mxfp6_e3m2"])
+def test_matmul_kernel_two_block_widths(rng, fname):
+    """ISSUE-2: 5/6-bit weights route through the fused dequant GEMM via
+    the two-block (64-code, 40/48-byte) pack tile."""
+    fmt = get_format(fname)
+    x = rng.standard_normal((17, 256)).astype(np.float32)
+    w = (rng.standard_normal((256, 128)) * 0.05).astype(np.float32)
+    qt = QTensor.quantize(jnp.asarray(w), fmt, axis=0)
+    ref = qmatmul_ref(jnp.asarray(x), qt.packed, qt.meta, fmt)
+    y = nxfp_matmul_pallas(jnp.asarray(x), qt.packed, qt.meta, fmt,
+                           tile_m=32, tile_n=64, tile_k=128, interpret=True)
+    scale = np.max(np.abs(np.asarray(ref))) + 1e-9
+    np.testing.assert_allclose(np.asarray(y) / scale,
+                               np.asarray(ref) / scale, atol=1e-5)
+
+
+@pytest.mark.parametrize("fname", ["nxfp5", "nxfp6"])
+def test_decode_attention_two_block_widths(rng, fname):
+    """5/6-bit KV caches hit the Pallas decode-attention kernel (head_dim
+    64 = two 32-blocks = one pack tile)."""
+    b, s, h, kvh, d = 2, 64, 8, 4, 64
+    q = rng.standard_normal((b, h, d)).astype(np.float32)
+    k = (rng.standard_normal((b, s, kvh, d)) * 0.3).astype(np.float32)
+    v = (rng.standard_normal((b, s, kvh, d)) * 0.3).astype(np.float32)
+    lengths = np.array([64, 30], np.int32)
+    kq = quantize_qtensor(jnp.asarray(k), fname, axis=-1, impl="xla")
+    vq = quantize_qtensor(jnp.asarray(v), fname, axis=-1, impl="xla")
+    o_pl = decode_attention(jnp.asarray(q), kq, vq, jnp.asarray(lengths),
+                            kvh, impl="pallas")
+    o_ref = decode_attention(jnp.asarray(q), kq, vq, jnp.asarray(lengths),
+                             kvh, impl="xla")
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_two_block_widths_odd_block_count_falls_back(rng):
+    """An odd number of 32-blocks can't tile into two-block pack tiles:
+    the wrappers must take the XLA path (not crash) and stay exact."""
+    x = rng.standard_normal((8, 96)).astype(np.float32)   # 3 blocks
+    w = (rng.standard_normal((96, 64)) * 0.1).astype(np.float32)
+    qt = QTensor.quantize(jnp.asarray(w), "nxfp5", axis=0)
+    y = qmatmul(jnp.asarray(x), qt, impl="pallas")        # falls back
+    ref = x @ np.asarray(qt.dequantize(jnp.float32))[:96]
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-2, atol=2e-2)
+    # head_dim 96 -> 3 blocks along the quantized axis: attention fallback
+    q = rng.standard_normal((2, 4, 96)).astype(np.float32)
+    k = (rng.standard_normal((2, 32, 2, 96)) * 0.2).astype(np.float32)
+    kq = quantize_qtensor(jnp.asarray(k), "nxfp5", axis=-1, impl="xla")
+    lengths = np.array([32, 16], np.int32)
+    o_pl = decode_attention(jnp.asarray(q), kq, kq, jnp.asarray(lengths),
+                            2, impl="pallas")
+    o_ref = decode_attention(jnp.asarray(q), kq, kq, jnp.asarray(lengths),
+                             2, impl="xla")
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-5)
+
+
 def test_quantize_wrapper_impls_agree(rng):
     x = rng.standard_normal((96, 80)).astype(np.float32)
     a = quantize_qtensor(jnp.asarray(x), "nxfp4", axis=0, impl="pallas")

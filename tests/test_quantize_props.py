@@ -165,6 +165,36 @@ def test_pack_roundtrip(bits, nblocks, seed):
     np.testing.assert_array_equal(np.asarray(out), codes)
 
 
+@given(st.sampled_from([5, 6]), st.integers(min_value=1, max_value=4),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_two_block_tile_pack_roundtrip(bits, npairs, seed):
+    """ISSUE-2: the 5/6-bit two-block (64-code, 40/48-byte) kernel tile.
+
+    Against the seed scatter oracle: (a) shift-or pack == scatter pack,
+    (b) the gather-free Pallas two-block unpack inverts both, (c) a
+    two-block tile's bytes are exactly its blocks' bytes concatenated —
+    the property that makes the tile a pure kernel granularity choice
+    rather than a layout migration.
+    """
+    from repro.core.pack import pack_codes_scatter, pack_tile
+    from repro.kernels.decode_lib import unpack_codes_pallas
+    r = np.random.default_rng(seed)
+    nb = 2 * npairs
+    codes = r.integers(0, 2 ** bits, size=(3, nb, 32)).astype(np.uint8)
+    packed = pack_codes(jnp.asarray(codes), bits)
+    np.testing.assert_array_equal(
+        np.asarray(packed),
+        np.asarray(pack_codes_scatter(jnp.asarray(codes), bits)))
+    out = unpack_codes_pallas(packed, bits)
+    np.testing.assert_array_equal(np.asarray(out), codes.astype(np.int32))
+    n_codes, n_bytes = pack_tile(bits)
+    assert (n_codes, n_bytes) == (64, 8 * bits)
+    tiled = pack_codes(jnp.asarray(codes.reshape(3, npairs, 64)), bits)
+    np.testing.assert_array_equal(
+        np.asarray(tiled).reshape(3, nb, 4 * bits), np.asarray(packed))
+
+
 def test_outlier_tracking_fig4():
     """The paper's Fig. 4 worked example, end to end."""
     x = np.zeros((1, 32), np.float32)

@@ -44,6 +44,78 @@ def test_stop_token_halts(setup):
         assert (res.tokens[i, n:] == 0).all()
 
 
+@pytest.mark.parametrize("fmts", [("nxfp4", "nxfp4"), (None, None)])
+def test_device_loop_bit_identical_to_host(setup, fmts):
+    """ISSUE-2 acceptance: the chunked on-device loop reproduces the seed
+    host loop bit-for-bit at temperature 0 — tokens AND n_generated —
+    including a chunk size that does not divide max_new."""
+    cfg, params = setup
+    wf, kf = fmts
+    eng = ServeEngine(cfg, params, QuantPolicy(weight_fmt=wf, kv_fmt=kf),
+                      max_len=48)
+    b = _batch(cfg)
+    rh = eng.generate(b, max_new=10, loop="host")
+    rd = eng.generate(b, max_new=10, loop="device", chunk=4)  # 4+4+2
+    np.testing.assert_array_equal(rh.tokens, rd.tokens)
+    np.testing.assert_array_equal(rh.n_generated, rd.n_generated)
+
+
+def test_device_loop_stop_token_mid_chunk(setup):
+    """A stop token landing mid-chunk must freeze that sequence's emission
+    and count exactly as the host loop does (done sequences keep decoding
+    but emit 0s), and early-exit must not change results."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, QuantPolicy(weight_fmt="nxfp4",
+                                               kv_fmt="nxfp4"), max_len=48)
+    b = _batch(cfg)
+    probe = eng.generate(b, max_new=10, loop="host")
+    # a token emitted at step 2 of sequence 0 -> stops mid-first-chunk
+    stop = int(probe.tokens[0, 2])
+    rh = eng.generate(b, max_new=10, stop_token=stop, loop="host")
+    rd = eng.generate(b, max_new=10, stop_token=stop, loop="device", chunk=4)
+    np.testing.assert_array_equal(rh.tokens, rd.tokens)
+    np.testing.assert_array_equal(rh.n_generated, rd.n_generated)
+    assert rd.n_generated[0] == 3          # stopped at its stop token
+    assert (rd.tokens[0, 3:] == 0).all()   # masked after stopping
+
+
+def test_device_loop_temperature_sampling(setup):
+    """Sampled generation on device: same PRNG split stream as the host
+    loop (one split per token), so same seed -> same tokens."""
+    cfg, params = setup
+    mk = lambda: ServeEngine(cfg, params, QuantPolicy(weight_fmt=None,
+                                                      kv_fmt=None),
+                             max_len=48, rng_seed=11)
+    b = _batch(cfg)
+    rh = mk().generate(b, max_new=8, temperature=1.3, loop="host")
+    rd = mk().generate(b, max_new=8, temperature=1.3, loop="device", chunk=3)
+    np.testing.assert_array_equal(rh.tokens, rd.tokens)
+    assert (rd.tokens < cfg.vocab).all() and (rd.tokens >= 0).all()
+
+
+def test_sampled_key_state_loop_independent(setup):
+    """After a sampled generation that early-stops, the NEXT sampled call
+    must still agree between loop modes — the device loop syncs its key
+    back to the host loop's split count (it over-splits to chunk end)."""
+    cfg, params = setup
+    mk = lambda: ServeEngine(cfg, params, QuantPolicy(weight_fmt=None,
+                                                      kv_fmt=None),
+                             max_len=64, rng_seed=5)
+    b = _batch(cfg, b=1)                     # 1 seq -> its stop = done.all()
+    eh, ed = mk(), mk()
+    probe = eh.generate(b, max_new=8, temperature=1.0, loop="host")
+    stop = int(probe.tokens[0, 1])           # stops the whole batch early
+    eh, ed = mk(), mk()
+    rh = eh.generate(b, max_new=8, temperature=1.0, stop_token=stop,
+                     loop="host")
+    rd = ed.generate(b, max_new=8, temperature=1.0, stop_token=stop,
+                     loop="device", chunk=8)
+    np.testing.assert_array_equal(rh.tokens, rd.tokens)
+    rh2 = eh.generate(b, max_new=6, temperature=1.0, loop="host")
+    rd2 = ed.generate(b, max_new=6, temperature=1.0, loop="device", chunk=3)
+    np.testing.assert_array_equal(rh2.tokens, rd2.tokens)
+
+
 def test_footprint_reduction(setup):
     cfg, params = setup
     q = ServeEngine(cfg, params, QuantPolicy(weight_fmt="nxfp4",
