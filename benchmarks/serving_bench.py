@@ -1,4 +1,4 @@
-"""Serving decode throughput: host loop vs on-device chunked loop.
+"""Serving decode throughput: host vs device loop + continuous traffic.
 
 The ISSUE-2 tentpole measurement. The seed engine ran one jit dispatch,
 one device→host copy and one ``block_until_ready`` per generated token, so
@@ -10,6 +10,13 @@ formats (dense bf16, nxfp4, nxfp6 — the last exercising the 5/6-bit
 two-block pack tile end to end) and checks greedy outputs stay
 bit-identical between the loops.
 
+The ISSUE-3 scenario (``continuous``): Poisson arrivals with MIXED
+prompt/output lengths served two ways — fixed FIFO batches through
+``ServeEngine`` (every batch runs to its slowest member) vs the
+``ContinuousEngine`` slot scheduler (finished slots re-admit at chunk
+boundaries, DESIGN.md §8). Reports aggregate useful tok/s and p50/p99
+TTFT for both.
+
 CPU-container caveat (DESIGN.md §6): absolute tok/s is not TPU wall time,
 but the dispatch-overhead regime this bench isolates is *worse* on real
 accelerators (per-dispatch latency hides more compute), so the host→device
@@ -20,6 +27,7 @@ NXFP_BENCH_QUICK=1 shrinks shapes for the CI smoke row.
 from __future__ import annotations
 
 import os
+import time
 
 import jax
 import numpy as np
@@ -27,7 +35,7 @@ import numpy as np
 from repro.core.qtensor import QuantPolicy
 from repro.models import init_params
 from repro.models.common import ModelConfig
-from repro.serving import ServeEngine
+from repro.serving import ContinuousEngine, Request, ServeEngine
 from .common import Csv
 
 # small enough that a decode step's FLOPs sit well under the per-dispatch
@@ -47,7 +55,7 @@ def _quick() -> bool:
     return os.environ.get("NXFP_BENCH_QUICK") == "1"
 
 
-def run(csv: Csv):
+def run_loops(csv: Csv):
     cfg = SERVE_CFG
     b, prompt = 4, 16
     # context stays short by design: the quantity under test is dispatch
@@ -96,6 +104,114 @@ def run(csv: Csv):
         if not identical:
             raise AssertionError(
                 f"greedy device loop diverged from host loop ({label})")
+
+
+# ---------------------------------------------------------------------------
+# continuous traffic (ISSUE-3): Poisson arrivals, mixed lengths
+# ---------------------------------------------------------------------------
+
+def _workload(cfg, rng, n_req, prompt_lens, max_new_choices, rate):
+    """Poisson arrivals; prompt lengths bucketed (bounds prefill compiles)."""
+    reqs, t = [], 0.0
+    for i in range(n_req):
+        t += float(rng.exponential(1.0 / rate))
+        tl = int(rng.choice(prompt_lens))
+        reqs.append(Request(
+            uid=i, tokens=rng.integers(0, cfg.vocab, (tl,)).astype(np.int32),
+            max_new=int(rng.choice(max_new_choices)), arrival_time=t))
+    return reqs
+
+
+def _serve_fixed_batches(cfg, params, policy, reqs, n_slots, max_len,
+                         chunk):
+    """Fixed-batch baseline: FIFO groups of ``n_slots``, each batch runs to
+    its SLOWEST member's max_new (idle finished slots burn compute), the
+    next batch waits for the previous to drain. Shorter prompts are
+    right-padded to the group max — the same FLOPs a mask-padding fixed
+    server spends. Returns (useful_tok_s, ttft_list, wall)."""
+    eng = ServeEngine(cfg, params, policy, max_len=max_len)
+    groups = [reqs[i:i + n_slots] for i in range(0, len(reqs), n_slots)]
+    # warm the compile caches outside the timed region (both serving paths
+    # measure steady-state traffic, not compilation)
+    for g in groups:
+        t_max = max(len(r.tokens) for r in g)
+        toks = np.zeros((len(g), t_max), np.int32)
+        eng.generate({"tokens": toks}, max_new=chunk, chunk=chunk)
+    t0 = time.time()
+    ttfts = []
+    for g in groups:
+        t_max = max(len(r.tokens) for r in g)
+        toks = np.zeros((len(g), t_max), np.int32)
+        for j, r in enumerate(g):
+            toks[j, :len(r.tokens)] = r.tokens
+        last_arrival = max(r.arrival_time for r in g)
+        now = time.time() - t0
+        if now < last_arrival:          # batch can't form until all arrive
+            time.sleep(last_arrival - now)
+        start = time.time() - t0
+        res = eng.generate({"tokens": toks},
+                           max_new=max(r.max_new for r in g), chunk=chunk)
+        ttfts += [start + res.prefill_seconds - r.arrival_time for r in g]
+    wall = time.time() - t0
+    useful = sum(r.max_new for r in reqs)
+    return useful / wall, ttfts, wall
+
+
+def _serve_continuous(cfg, params, policy, reqs, n_slots, max_len, chunk):
+    eng = ContinuousEngine(cfg, params, policy, n_slots=n_slots,
+                           max_len=max_len, chunk=chunk)
+    # warm-up: one tiny request per distinct prompt length + the chunk prog
+    warm = {len(r.tokens) for r in reqs}
+    eng.serve([Request(uid=-1 - i, tokens=np.zeros((t,), np.int32),
+                       max_new=1) for i, t in enumerate(sorted(warm))])
+    t0 = time.time()
+    results = eng.serve(reqs)
+    wall = time.time() - t0
+    useful = sum(r.n_generated for r in results)
+    return useful / wall, [r.ttft for r in results], wall
+
+
+def run_continuous(csv: Csv):
+    cfg = SERVE_CFG
+    n_slots = 4
+    # heavy-traffic regime: arrivals outpace service so the queue stays
+    # deep, and output lengths are high-variance — the workload where
+    # lockstep batches idle the most slots waiting for their straggler
+    if _quick():
+        n_req, chunk = 12, 8
+        max_new_choices, rate = (8, 16, 48), 200.0
+    else:
+        n_req, chunk = 32, 16
+        max_new_choices, rate = (16, 32, 64, 128), 200.0
+    prompt_lens = (8, 16)
+    max_len = max(prompt_lens) + max(max_new_choices) + 8
+    rng = np.random.default_rng(0)
+    reqs = _workload(cfg, rng, n_req, prompt_lens, max_new_choices, rate)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    policy = QuantPolicy(weight_fmt="nxfp4", kv_fmt="nxfp4")
+
+    fixed_tok_s, fixed_ttft, fixed_wall = _serve_fixed_batches(
+        cfg, params, policy, reqs, n_slots, max_len, chunk)
+    cont_tok_s, cont_ttft, cont_wall = _serve_continuous(
+        cfg, params, policy, reqs, n_slots, max_len, chunk)
+
+    speedup = cont_tok_s / fixed_tok_s
+    for label, tok_s, ttft, wall in [
+            ("fixed-batch", fixed_tok_s, fixed_ttft, fixed_wall),
+            ("continuous", cont_tok_s, cont_ttft, cont_wall)]:
+        p50 = float(np.percentile(ttft, 50)) * 1e3
+        p99 = float(np.percentile(ttft, 99)) * 1e3
+        derived = (f"tok_s={tok_s:.0f} p50_ttft_ms={p50:.1f} "
+                   f"p99_ttft_ms={p99:.1f} n_req={n_req} slots={n_slots}")
+        if label == "continuous":
+            derived += f" speedup_vs_fixed={speedup:.2f}x"
+        csv.add(f"serving/continuous/{label}", 1e6 / tok_s, derived,
+                unit="us_per_tok")
+
+
+def run(csv: Csv):
+    run_loops(csv)
+    run_continuous(csv)
 
 
 def main():

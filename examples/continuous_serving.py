@@ -1,0 +1,65 @@
+"""Continuous-batching serving with NxFP direct-cast weights + KV cache.
+
+Drives the ``ContinuousEngine`` slot scheduler end to end: a Poisson
+request stream with mixed prompt/output lengths is admitted into a
+2-slot live cache at chunk boundaries — finished slots are evicted and
+re-prefilled while their neighbors keep decoding — and every request's
+greedy output is checked bit-identical to serving it alone through the
+per-token host loop (the DESIGN.md §8 invariant that makes the scheduler
+testable).
+
+    PYTHONPATH=src python examples/continuous_serving.py
+"""
+import logging
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.qtensor import QuantPolicy
+from repro.models import init_params
+from repro.serving import ContinuousEngine, Request, ServeEngine
+
+N_SLOTS = 2
+N_REQUESTS = 6
+CHUNK = 8
+
+
+def main():
+    logging.basicConfig(level=logging.INFO,
+                        format="%(name)s: %(message)s")
+    cfg = get_smoke_config("llama3_8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    policy = QuantPolicy(weight_fmt="nxfp4", kv_fmt="nxfp4")
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab, (8,)).astype(np.int32),
+                    max_new=int(rng.choice([6, 12, 24])),
+                    arrival_time=i * 0.01)
+            for i in range(N_REQUESTS)]
+
+    eng = ContinuousEngine(cfg, params, policy, n_slots=N_SLOTS,
+                           max_len=64, chunk=CHUNK)
+    # warm the prefill/chunk compile caches so the metrics below show
+    # steady-state serving, not XLA compilation
+    eng.serve([Request(uid=-1, tokens=np.zeros((8,), np.int32), max_new=1)])
+    results = eng.serve(reqs)
+
+    solo = ServeEngine(cfg, params, policy, max_len=64)
+    print(f"\n{'uid':>3} {'n_tok':>5} {'queue_ms':>8} {'ttft_ms':>7} "
+          f"{'tok/s':>7}  solo-identical")
+    for r in sorted(results, key=lambda x: x.uid):
+        ref = solo.generate({"tokens": reqs[r.uid].tokens[None]},
+                            max_new=reqs[r.uid].max_new, loop="host")
+        ok = bool(np.array_equal(r.tokens, ref.tokens[0]))
+        print(f"{r.uid:>3} {r.n_generated:>5} {r.queue_delay*1e3:>8.1f} "
+              f"{r.ttft*1e3:>7.1f} {r.decode_tok_s:>7.0f}  {ok}")
+        assert ok, f"uid={r.uid} diverged from the solo oracle"
+    total = sum(r.n_generated for r in results)
+    print(f"\n{N_REQUESTS} requests over {N_SLOTS} slots, {total} tokens — "
+          f"every output bit-identical to solo host-loop serving.")
+
+
+if __name__ == "__main__":
+    main()

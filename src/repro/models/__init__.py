@@ -1,7 +1,10 @@
 """Model zoo: one config type, six architecture families, pure JAX."""
 from .common import ModelConfig
-from .lm import (decode_loop, decode_step, forward_train, init_cache_specs,
-                 init_params, loss_fn, prefill)
+from .lm import (decode_loop, decode_step, forward_train, init_cache,
+                 init_cache_specs, init_params, loss_fn, prefill,
+                 prefill_into_slot, reset_slot, write_cache_slot)
 
 __all__ = ["ModelConfig", "init_params", "forward_train", "loss_fn",
-           "prefill", "decode_step", "decode_loop", "init_cache_specs"]
+           "prefill", "decode_step", "decode_loop", "init_cache",
+           "init_cache_specs", "prefill_into_slot", "reset_slot",
+           "write_cache_slot"]

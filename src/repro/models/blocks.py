@@ -117,10 +117,15 @@ def layer_forward(cfg: ModelConfig, p: Params, x, positions, kind: str,
 
 def _attn_decode(cfg: ModelConfig, p: Params, h, layer_cache, pos,
                  kv_fmt: Optional[str], prefix: str = ""):
-    """h (B, 1, D) -> (attn out (B, 1, D), new attn cache entries)."""
+    """h (B, 1, D) -> (attn out (B, 1, D), new attn cache entries).
+
+    ``pos`` is (B,) int32 — each slot ropes, writes and attends at its own
+    position (a scalar broadcasts for legacy callers).
+    """
     b = h.shape[0]
     q, k1, v1 = gqa_project(cfg, p, h, prefix)
-    positions = jnp.reshape(pos, (1,))
+    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32),
+                                 (b,)).reshape(b, 1)
     cos, sin = rope_freqs(positions, cfg.hd, cfg.rope_theta)
     q = apply_rope(q.reshape(b, 1, -1, cfg.hd), cos, sin).reshape(q.shape)
     k1 = apply_rope(k1, cos, sin)

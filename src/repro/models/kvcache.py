@@ -11,6 +11,13 @@ writes packed uint8 + uint16 meta straight into the cache layout below —
 no int32 code intermediate, no separate repack pass (DESIGN.md §2).
 
 Cache pytrees hold a leading stacked-layer axis consumed by lax.scan.
+
+Positions are PER SLOT: ``pos`` is a (B,) int32 vector, one ring pointer
+per batch slot, so slots advance independently — the invariant continuous
+batching needs (a finished slot can be re-prefilled while its neighbors
+keep decoding; see DESIGN.md §8). ``write_token`` scatters each slot's
+K/V row at its own ring slot (``pos[b] % window``), and ``attend_decode``
+masks each slot to its own valid length.
 """
 from __future__ import annotations
 
@@ -45,8 +52,10 @@ def attn_cache_init(cfg: ModelConfig, n_layers: int, batch: int,
 
 def ssm_cache_init(cfg: ModelConfig, n_layers: int, batch: int):
     di, n, cw = cfg.dinner, cfg.ssm_state, cfg.conv_width
+    # conv tail is carried in activation dtype (prefill emits it that way;
+    # the decode scan requires a fixed-point carry dtype)
     return {"h": jnp.zeros((n_layers, batch, di, n), jnp.float32),
-            "conv": jnp.zeros((n_layers, batch, cw - 1, di), jnp.float32)}
+            "conv": jnp.zeros((n_layers, batch, cw - 1, di), cfg.dtype)}
 
 
 def _quantize_kv(x, kv_fmt: str):
@@ -90,15 +99,30 @@ def write_prefill(cfg: ModelConfig, k, v, kv_fmt: Optional[str],
             "v_packed": place(vp), "v_meta": place(vm)}
 
 
+def _per_slot(pos, b: int):
+    """Normalize a traced position to a per-slot (B,) int32 vector."""
+    pos = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(pos, (b,)) if pos.ndim == 0 else pos
+
+
 def write_token(cfg: ModelConfig, layer_cache, k1, v1, pos,
                 kv_fmt: Optional[str]):
-    """Insert one token's K/V (B, 1, KVH, hd) at position `pos` (traced)."""
+    """Insert one token's K/V (B, 1, KVH, hd) at per-slot positions.
+
+    ``pos`` is (B,) int32 (a scalar broadcasts): each batch slot writes at
+    its OWN ring slot (``pos[b] % window``), so ragged slots never touch a
+    neighbor's rows — a vmapped ``dynamic_update_slice`` per sequence.
+    """
     w = cfg.sliding_window
+    pos = _per_slot(pos, k1.shape[0])
     slot = (pos % w) if w else pos
 
     def upd(buf, val):
-        idx = (0, slot) + (0,) * (buf.ndim - 2)
-        return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype), idx)
+        def one(row, v, s):
+            idx = (s,) + (0,) * (row.ndim - 1)
+            return jax.lax.dynamic_update_slice(row, v.astype(row.dtype),
+                                                idx)
+        return jax.vmap(one)(buf, val, slot)
 
     if kv_fmt is None:
         return {"k": upd(layer_cache["k"], k1),
@@ -113,15 +137,17 @@ def write_token(cfg: ModelConfig, layer_cache, k1, v1, pos,
 
 def attend_decode(cfg: ModelConfig, layer_cache, q, pos,
                   kv_fmt: Optional[str]):
-    """q (B, H, hd) attends to one layer's cache; pos = current position.
+    """q (B, H, hd) attends to one layer's cache; pos (B,) per-slot positions.
 
-    Returns (B, H, hd) f32.
+    Each slot attends over its OWN valid length (``min(pos[b]+1, window)``)
+    — ragged slots are first-class, not a broadcast scalar. Returns
+    (B, H, hd) f32.
     """
     b, h, hd = q.shape
     kvh = cfg.n_kv_heads
     w = cfg.sliding_window
-    length = jnp.minimum(pos + 1, w) if w else pos + 1
-    lengths = jnp.full((b,), length, jnp.int32)
+    pos = _per_slot(pos, b)
+    lengths = jnp.minimum(pos + 1, w) if w else pos + 1
 
     if kv_fmt is not None:
         fmt = get_format(kv_fmt)

@@ -174,7 +174,9 @@ def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
     x = _embed(cfg, params, tokens)
     positions = jnp.arange(t, dtype=jnp.int32)
     fam = cfg.family
-    cache: Dict[str, Any] = {"pos": jnp.asarray(t, jnp.int32)}
+    # per-slot position vector: every slot of the decode stack advances
+    # independently (DESIGN.md §8) — lockstep prefill just starts them equal
+    cache: Dict[str, Any] = {"pos": jnp.full((b,), t, jnp.int32)}
 
     def attn_entries(out):
         return write_prefill(cfg, out["k"], out["v"], kv_fmt, max_len)
@@ -235,7 +237,11 @@ def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
 
 def decode_step(cfg: ModelConfig, params: Params, tokens, cache,
                 kv_fmt: Optional[str]) -> Tuple[jax.Array, Dict[str, Any]]:
-    """tokens (B, 1); cache from prefill. Returns (logits (B, V), new cache)."""
+    """tokens (B, 1); cache from prefill. Returns (logits (B, V), new cache).
+
+    ``cache["pos"]`` is (B,) — slots at ragged positions decode together;
+    each ropes/writes/attends at its own offset.
+    """
     pos = cache["pos"]
     x = _embed(cfg, params, tokens)
     fam = cfg.family
@@ -279,7 +285,8 @@ def decode_step(cfg: ModelConfig, params: Params, tokens, cache,
 
 
 def decode_loop(cfg: ModelConfig, params: Params, tok, cache, n_steps: int,
-                kv_fmt: Optional[str], sample_fn, key):
+                kv_fmt: Optional[str], sample_fn, key,
+                split_fn=jax.random.split):
     """Run ``n_steps`` decode steps as ONE on-device ``lax.scan``.
 
     The serving hot loop (DESIGN.md §7): the KV cache, logits and sampled
@@ -293,13 +300,18 @@ def decode_loop(cfg: ModelConfig, params: Params, tok, cache, n_steps: int,
     sampler, so the key stream is invariant to chunking AND matches the
     host loop's per-token ``jax.random.split``.
 
+    ``key``/``split_fn`` generalize the sampler state: the continuous
+    engine threads PER-SLOT keys ((B, 2) uint32) with a vmapped split so
+    each slot's stream matches the solo engine's chain for its seed;
+    ``split_fn(key) -> (next_key, subkey)``.
+
     Returns ``(tokens (B, n_steps), tok, cache, key)`` — the emitted
     tokens start with the entering token; the returned ``tok`` enters the
     next chunk.
     """
     def step(carry, _):
         t, c, k = carry
-        k, sub = jax.random.split(k)
+        k, sub = split_fn(k)
         logits, c = decode_step(cfg, params, t[:, None], c, kv_fmt)
         nxt = sample_fn(logits, sub).astype(jnp.int32)
         return (nxt, c, k), t
@@ -309,39 +321,119 @@ def decode_loop(cfg: ModelConfig, params: Params, tok, cache, n_steps: int,
     return toks.T, tok, cache, key
 
 
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               kv_fmt: Optional[str], pos_value: int = 0) -> Dict[str, Any]:
+    """Allocate a CONCRETE zeroed cache (the continuous engine's arena).
+
+    Every slot starts empty at ``pos_value``; requests are prefilled into
+    slots one at a time via ``prefill_into_slot``. Also the shape source
+    for ``init_cache_specs`` (dry-run lowering uses the same builder under
+    ``eval_shape``).
+    """
+    from .kvcache import attn_cache_init
+
+    cache: Dict[str, Any] = {"pos": jnp.full((batch,), pos_value,
+                                             jnp.int32)}
+    fam, L = cfg.family, cfg.n_layers
+    if fam in _KIND:
+        entries = {}
+        if fam != "ssm":
+            entries.update(attn_cache_init(cfg, L, batch, max_len, kv_fmt))
+        if fam in ("ssm", "hybrid"):
+            entries.update(ssm_cache_init(cfg, L, batch))
+        cache["layers"] = entries
+    elif fam == "vlm":
+        every = cfg.cross_attn_every
+        groups = L // every
+        self_c = attn_cache_init(cfg, groups * (every - 1), batch,
+                                 max_len, kv_fmt)
+        cache["self_layers"] = jax.tree.map(
+            lambda l: l.reshape(groups, every - 1, *l.shape[1:]), self_c)
+        s_vis = cfg.n_vision_tokens
+        mem = jnp.zeros((groups, batch, s_vis, cfg.n_kv_heads, cfg.hd),
+                        cfg.dtype)
+        cache["cross_layers"] = {"mem_k": mem, "mem_v": mem}
+    elif fam == "audio":
+        entries = attn_cache_init(cfg, L, batch, max_len, kv_fmt)
+        s_enc = cfg.n_audio_frames
+        mem = jnp.zeros((L, batch, s_enc, cfg.n_kv_heads, cfg.hd),
+                        cfg.dtype)
+        entries.update(mem_k=mem, mem_v=mem)
+        cache["layers"] = entries
+    else:
+        raise ValueError(fam)
+    return cache
+
+
 def init_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
                      kv_fmt: Optional[str]):
     """Abstract cache (ShapeDtypeStructs) for decode-only dry-run lowering."""
-    from .kvcache import attn_cache_init
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len, kv_fmt, max_len - 1))
 
-    def build():
-        cache: Dict[str, Any] = {"pos": jnp.asarray(max_len - 1, jnp.int32)}
-        fam, L = cfg.family, cfg.n_layers
-        if fam in _KIND:
-            entries = {}
-            if fam != "ssm":
-                entries.update(attn_cache_init(cfg, L, batch, max_len, kv_fmt))
-            if fam in ("ssm", "hybrid"):
-                entries.update(ssm_cache_init(cfg, L, batch))
-            cache["layers"] = entries
-        elif fam == "vlm":
-            every = cfg.cross_attn_every
-            groups = L // every
-            self_c = attn_cache_init(cfg, groups * (every - 1), batch,
-                                     max_len, kv_fmt)
-            cache["self_layers"] = jax.tree.map(
-                lambda l: l.reshape(groups, every - 1, *l.shape[1:]), self_c)
-            s_vis = cfg.n_vision_tokens
-            mem = jnp.zeros((groups, batch, s_vis, cfg.n_kv_heads, cfg.hd),
-                            cfg.dtype)
-            cache["cross_layers"] = {"mem_k": mem, "mem_v": mem}
-        elif fam == "audio":
-            entries = attn_cache_init(cfg, L, batch, max_len, kv_fmt)
-            s_enc = cfg.n_audio_frames
-            mem = jnp.zeros((L, batch, s_enc, cfg.n_kv_heads, cfg.hd),
-                            cfg.dtype)
-            entries.update(mem_k=mem, mem_v=mem)
-            cache["layers"] = entries
-        return cache
 
-    return jax.eval_shape(build)
+# ---------------------------------------------------------------------------
+# slot surgery: admit / evict ONE sequence of a live batched cache
+# ---------------------------------------------------------------------------
+
+def _batch_axis(name: str) -> int:
+    """Batch-axis position inside a cache group's stacked leaves."""
+    return 2 if name == "self_layers" else 1  # vlm self stack: (G, k-1, B,…)
+
+
+def write_cache_slot(cache: Dict[str, Any], solo: Dict[str, Any], slot):
+    """Merge a batch-1 cache (from a batch-1 ``prefill``) into slot ``slot``.
+
+    Every leaf of ``solo`` is size 1 along the batch axis; a traced-index
+    ``dynamic_update_slice`` drops it into the live cache without touching
+    neighbor slots — K/V rows, ring meta, SSM state and the slot's ``pos``
+    all land atomically (one fused jit).
+    """
+    new: Dict[str, Any] = {"pos": jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.asarray(solo["pos"], jnp.int32), (slot,))}
+    for name, group in cache.items():
+        if name == "pos":
+            continue
+        axis = _batch_axis(name)
+
+        def put(leaf, s_leaf):
+            idx = [0] * leaf.ndim
+            idx[axis] = slot
+            return jax.lax.dynamic_update_slice(
+                leaf, s_leaf.astype(leaf.dtype), tuple(idx))
+
+        new[name] = jax.tree.map(put, group, solo[name])
+    return new
+
+
+def prefill_into_slot(cfg: ModelConfig, params: Params,
+                      batch: Dict[str, Any], cache: Dict[str, Any], slot,
+                      max_len: int, kv_fmt: Optional[str]):
+    """Prefill ONE request (batch-1 inputs) into slot ``slot`` of a live cache.
+
+    The prompt runs through the ordinary batch-1 ``prefill`` (so its K/V
+    and logits are bit-identical to serving it alone), then its cache is
+    scattered into the slot. Returns (last logits (1, V), new cache).
+    """
+    assert batch["tokens"].shape[0] == 1, batch["tokens"].shape
+    logits, solo = prefill(cfg, params, batch, max_len, kv_fmt)
+    return logits, write_cache_slot(cache, solo, slot)
+
+
+def reset_slot(cfg: ModelConfig, cache: Dict[str, Any], slot):
+    """Park a finished slot: ``pos[slot] -> 0``, recurrent state zeroed.
+
+    K/V rows are left stale on purpose — reads are masked to ``pos`` and
+    admission overwrites the whole slot — but the ring pointer must stop
+    growing (an unparked drained slot would eventually clamp-write at the
+    buffer edge) and SSM state integrates forward unmasked, so both reset.
+    """
+    new = dict(cache)
+    new["pos"] = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.zeros((1,), jnp.int32), (slot,))
+    layers = cache.get("layers")
+    if layers is not None and "h" in layers:
+        from .ssm import reset_state_slot
+        h, conv = reset_state_slot(layers["h"], layers["conv"], slot)
+        new["layers"] = dict(layers, h=h, conv=conv)
+    return new

@@ -131,6 +131,23 @@ def mamba_block(cfg: ModelConfig, p, x, h0=None, conv0=None,
     return dense(y.astype(x.dtype), p[f"{prefix}out_w"]), hf, conv_tail
 
 
+def reset_state_slot(h, conv, slot):
+    """Zero ONE batch slot of stacked SSM state (L, B, ...).
+
+    Attention slots are implicitly reset by masking reads to ``pos`` and
+    overwriting writes, but the recurrent state feeds forward unmasked —
+    admitting a new request into a slot MUST clear it (the prefill merge
+    overwrites it too; this is the parked-slot reset that keeps a drained
+    slot from integrating garbage between requests).
+    """
+    def zero(buf):
+        z = jnp.zeros(buf.shape[:1] + (1,) + buf.shape[2:], buf.dtype)
+        idx = (0, slot) + (0,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, z, idx)
+
+    return zero(h), zero(conv)
+
+
 def mamba_step(cfg: ModelConfig, p, x, h, conv_state, prefix: str = "ssm_"):
     """Single-token decode. x (B, 1, D); h (B, di, N); conv_state (B, cw-1, di).
 

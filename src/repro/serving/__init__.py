@@ -1,3 +1,6 @@
 from .engine import ServeEngine, GenerationResult
+from .scheduler import (ContinuousEngine, Request, RequestResult,
+                        SlotScheduler)
 
-__all__ = ["ServeEngine", "GenerationResult"]
+__all__ = ["ServeEngine", "GenerationResult", "ContinuousEngine",
+           "Request", "RequestResult", "SlotScheduler"]

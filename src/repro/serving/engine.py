@@ -21,8 +21,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -50,14 +51,52 @@ _advance_key = jax.jit(lambda key, n: jax.lax.fori_loop(
     0, n, lambda _, k: jax.random.split(k)[0], key))
 
 
+# servers capture/silence straggler + scheduler telemetry through the
+# standard logging tree ("repro.serving" / "repro.serving.scheduler") —
+# no bare prints on the serving path
+logger = logging.getLogger("repro.serving")
+
+
 def _watchdog(times: List[float], unit: str):
     """Straggler telemetry: flag dispatches > 3x median (host-side)."""
     if len(times) > 4:
         med = float(np.median(times))
         slow = [i for i, s in enumerate(times) if s > 3 * med]
         if slow:
-            print(f"[watchdog] {len(slow)} slow decode {unit}s "
-                  f"(>{3 * med * 1e3:.1f} ms): {slow[:8]}")
+            logger.warning("%d slow decode %ss (>%.1f ms): %s",
+                           len(slow), unit, 3 * med * 1e3, slow[:8])
+
+
+def _per_seq(value, b: int, dtype, default):
+    """Broadcast a scalar / per-sequence sampling config to a (B,) vector."""
+    if value is None:
+        value = default
+    return np.broadcast_to(np.asarray(value, dtype), (b,)).copy()
+
+
+def mask_chunk_emissions(toks, done, n_gen, stop, max_new=None):
+    """Shared chunk emission/stop semantics (host-loop equivalent).
+
+    toks (B, n) are a chunk's raw decode outputs. Step i of row b is live
+    iff the row was not done at chunk entry, no stop token landed
+    STRICTLY earlier in the chunk (the hit itself emits), and — when a
+    per-slot ``max_new`` budget is given — ``n_gen + i < max_new``.
+    Returns (emitted (B, n), n_gen', done').
+    """
+    hits = toks == stop[:, None]                       # stop<0: never
+    before = jnp.cumsum(hits.astype(jnp.int32), axis=1) \
+        - hits.astype(jnp.int32)                       # stops before i
+    done_before = done[:, None] | (before > 0)         # (B, n)
+    if max_new is not None:
+        budget = n_gen[:, None] + jnp.arange(toks.shape[1],
+                                             dtype=jnp.int32)[None, :]
+        done_before = done_before | (budget >= max_new[:, None])
+    emitted = jnp.where(done_before, 0, toks)
+    n_gen = n_gen + jnp.sum(~done_before, axis=1).astype(jnp.int32)
+    done = done | jnp.any(hits, axis=1)
+    if max_new is not None:
+        done = done | (n_gen >= max_new)
+    return emitted, n_gen, done
 
 
 class ServeEngine:
@@ -77,19 +116,30 @@ class ServeEngine:
             lambda p, b: prefill(cfg, p, b, max_len=max_len, kv_fmt=kv))
         self._decode = jax.jit(
             lambda p, t, c: decode_step(cfg, p, t, c, kv_fmt=kv))
-        # temperature/stop_token are traced (greedy-ness is the only
-        # sampling branch), so serving mixed per-request temperatures or
-        # stop ids never recompiles — only a new scan length does
+        # temperature/stop are traced PER-SLOT (B,) vectors (greedy-ness is
+        # the only sampling branch), so one batch serves mixed per-request
+        # temperatures and stop ids without recompiling — only a new scan
+        # length does
         self._chunk = jax.jit(
             functools.partial(self._chunk_fn, cfg=cfg, kv_fmt=kv),
             static_argnames=("n_steps", "greedy"))
         self._key = jax.random.PRNGKey(rng_seed)
 
-    def _sample(self, logits, temperature: float):
-        if temperature == 0.0:
-            return jnp.argmax(logits, axis=-1)
+    def _sample(self, logits, temperature: np.ndarray):
+        """logits (B, V); temperature (B,) — rows with temp 0 take argmax.
+
+        All-greedy batches never touch the key (the seed host-loop
+        contract); any sampled row costs exactly one split per call.
+        """
+        greedy = jnp.argmax(logits, axis=-1)
+        if (temperature == 0.0).all():
+            return greedy
         self._key, sub = jax.random.split(self._key)
-        return jax.random.categorical(sub, logits / temperature, axis=-1)
+        t = jnp.asarray(temperature, jnp.float32)
+        safe = jnp.where(t > 0, t, 1.0)
+        sampled = jax.random.categorical(sub, logits / safe[:, None],
+                                         axis=-1)
+        return jnp.where(t > 0, sampled, greedy)
 
     # -- on-device chunked decode (DESIGN.md §7) ----------------------------
 
@@ -107,31 +157,35 @@ class ServeEngine:
         emissions are masked to 0 and their counters frozen, so results
         are bit-identical at any chunk size.
 
-        ``stop`` is a traced int32 scalar; -1 (no valid token id) means
-        no stop token.
+        ``temperature`` and ``stop`` are traced PER-SLOT (B,) vectors:
+        rows with temperature 0 take argmax (sampled rows share the
+        per-step subkey, matching ``_sample``); ``stop[b] < 0`` (no valid
+        token id) means no stop token for that row. ``greedy`` stays a
+        static flag for the ALL-greedy batch so it never consumes keys.
         """
         def sample(logits, sub):
+            g = jnp.argmax(logits, axis=-1)
             if greedy:
-                return jnp.argmax(logits, axis=-1)
-            return jax.random.categorical(sub, logits / temperature, axis=-1)
+                return g
+            safe = jnp.where(temperature > 0, temperature, 1.0)
+            s = jax.random.categorical(sub, logits / safe[:, None], axis=-1)
+            return jnp.where(temperature > 0, s, g)
 
         toks, tok, cache, key = decode_loop(
             cfg, params, tok, cache, n_steps, kv_fmt, sample, key)
-
-        hits = toks == stop                                 # stop<0: never
-        before = jnp.cumsum(hits.astype(jnp.int32), axis=1) \
-            - hits.astype(jnp.int32)                       # stops before i
-        done_before = done[:, None] | (before > 0)          # (B, n_steps)
-        emitted = jnp.where(done_before, 0, toks)
-        n_gen = n_gen + jnp.sum(~done_before, axis=1).astype(jnp.int32)
-        done = done | jnp.any(hits, axis=1)
+        emitted, n_gen, done = mask_chunk_emissions(toks, done, n_gen, stop)
         return emitted, tok, cache, key, done, n_gen
 
     def generate(self, batch: Dict[str, Any], max_new: int,
-                 temperature: float = 0.0,
-                 stop_token: Optional[int] = None,
+                 temperature: Union[float, np.ndarray] = 0.0,
+                 stop_token: Optional[Union[int, np.ndarray]] = None,
                  loop: str = "device", chunk: int = 32) -> GenerationResult:
         """Generate ``max_new`` tokens per sequence.
+
+        ``temperature`` / ``stop_token`` accept a scalar OR a per-sequence
+        (B,) vector — one batch serves mixed sampling configs without
+        recompiling (both are traced). A stop entry of -1 disables the
+        stop token for that row.
 
         ``loop="device"`` (default): chunked on-device ``lax.scan`` —
         one jit dispatch and one device→host copy per ``chunk`` tokens;
@@ -145,9 +199,13 @@ class ServeEngine:
         (``max_new % chunk``), cached thereafter — serve with chunk
         multiples when ``max_new`` varies a lot across requests.
         """
+        b = batch["tokens"].shape[0]
+        temp = _per_seq(temperature, b, np.float32, 0.0)
+        stop = _per_seq(stop_token, b, np.int32, -1)
+        has_stop = bool((stop >= 0).any())
+        greedy = bool((temp == 0.0).all())
         if loop == "host":
-            return self._generate_host(batch, max_new, temperature,
-                                       stop_token)
+            return self._generate_host(batch, max_new, temp, stop)
         assert loop == "device", loop
         assert chunk >= 1, chunk
         t0 = time.time()
@@ -155,14 +213,11 @@ class ServeEngine:
         logits.block_until_ready()
         t1 = time.time()
 
-        b = batch["tokens"].shape[0]
         out = np.zeros((b, max_new), np.int32)
-        tok = self._sample(logits, temperature).astype(jnp.int32)
+        tok = self._sample(logits, temp).astype(jnp.int32)
         key = self._key          # threaded on device; synced back below
         done = jnp.zeros((b,), bool)
         n_gen = jnp.zeros((b,), jnp.int32)
-        temp = jnp.float32(temperature if temperature != 0.0 else 1.0)
-        stop = jnp.int32(-1 if stop_token is None else stop_token)
         chunk_times: List[float] = []
         i = 0
         while i < max_new:
@@ -170,22 +225,21 @@ class ServeEngine:
             ts = time.time()
             emitted, tok, cache, key, done, n_gen = self._chunk(
                 self.params, tok, cache, key, done, n_gen, temp, stop,
-                n_steps=c, greedy=(temperature == 0.0))
+                n_steps=c, greedy=greedy)
             out[:, i:i + c] = np.asarray(emitted)   # one copy per chunk
             chunk_times.append(time.time() - ts)
             i += c
-            if stop_token is not None and bool(np.asarray(done).all()):
+            if has_stop and bool(np.asarray(done).all()):
                 break
-        if temperature != 0.0:
-            self._sync_key(key, np.asarray(n_gen), out, i, max_new,
-                           stop_token)
+        if not greedy:
+            self._sync_key(key, np.asarray(n_gen), out, i, max_new, stop)
         t2 = time.time()
         _watchdog(chunk_times, "chunk")
         return GenerationResult(out, np.asarray(n_gen), t1 - t0, t2 - t1,
                                 chunk_times)
 
     def _sync_key(self, device_key, n_gen, out, steps_ran: int,
-                  max_new: int, stop_token: Optional[int]):
+                  max_new: int, stop: np.ndarray):
         """Advance ``self._key`` by the HOST loop's split count, so RNG
         state after a sampled call is loop-mode independent (subsequent
         sampled calls match across ``loop=`` modes too). The host loop
@@ -194,9 +248,9 @@ class ServeEngine:
         step ran) is ahead of the host oracle's.
         """
         splits = max_new
-        if stop_token is not None and max_new > 0:
+        if (stop >= 0).any() and max_new > 0:
             last = out[np.arange(out.shape[0]), n_gen - 1]
-            if (last == stop_token).all():       # host broke at done.all()
+            if (last == stop).all():             # host broke at done.all()
                 splits = int(n_gen.max()) - 1
         if splits == steps_ran:
             self._key = device_key               # same chain, same count
@@ -206,29 +260,30 @@ class ServeEngine:
     # -- per-token host loop (seed baseline / bit-equality oracle) ----------
 
     def _generate_host(self, batch: Dict[str, Any], max_new: int,
-                       temperature: float = 0.0,
-                       stop_token: Optional[int] = None) -> GenerationResult:
+                       temp: np.ndarray, stop: np.ndarray
+                       ) -> GenerationResult:
         t0 = time.time()
         logits, cache = self._prefill(self.params, batch)
         logits.block_until_ready()
         t1 = time.time()
 
         b = batch["tokens"].shape[0]
+        has_stop = bool((stop >= 0).any())
         out = np.zeros((b, max_new), np.int32)
         done = np.zeros((b,), bool)
         n_gen = np.zeros((b,), np.int32)
         step_times: List[float] = []
-        tok = self._sample(logits, temperature).astype(jnp.int32)
+        tok = self._sample(logits, temp).astype(jnp.int32)
         for i in range(max_new):
             out[:, i] = np.where(done, 0, np.asarray(tok))
             n_gen += (~done).astype(np.int32)
-            if stop_token is not None:
-                done |= np.asarray(tok) == stop_token
+            if has_stop:
+                done |= np.asarray(tok) == stop
             if done.all():
                 break
             ts = time.time()
             logits, cache = self._decode(self.params, tok[:, None], cache)
-            tok = self._sample(logits, temperature).astype(jnp.int32)
+            tok = self._sample(logits, temp).astype(jnp.int32)
             tok.block_until_ready()
             step_times.append(time.time() - ts)
         t2 = time.time()

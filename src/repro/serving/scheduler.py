@@ -1,0 +1,342 @@
+"""Continuous-batching scheduler: admit requests into live decode slots.
+
+``ServeEngine`` serves FIXED batches in lockstep — every sequence waits
+for the slowest, and a finished slot idles until the whole batch drains.
+This module adds the other half of a production serving loop (DESIGN.md
+§8): a ``ContinuousEngine`` that keeps ONE persistent B-slot cache on
+device and a ``SlotScheduler`` that, at every chunk boundary (the natural
+admission point PR 2 created), evicts finished slots and prefills queued
+requests into them while the neighbors keep decoding.
+
+The whole design leans on the per-slot position plumbing: ``cache["pos"]``
+is a (B,) vector, each slot ropes/writes/attends at its own offset, and
+``prefill_into_slot`` scatters a batch-1 prefill into one slot of the live
+cache. Per-request determinism is preserved exactly — a request served
+through the continuous engine emits the SAME greedy tokens as serving it
+alone through ``ServeEngine(loop="host")``, and sampled requests follow
+the per-request seed's split chain — which is what makes the whole
+scheduler testable against a bit-equality oracle.
+
+Caveat: MoE routing couples batch rows through expert capacity (arrival
+order + cap depend on the whole batch), so the bit-equality guarantee
+holds for the dense/ssm/hybrid/audio families, not ``family="moe"``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import logging
+import time
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qtensor import QuantPolicy, direct_cast_tree
+from repro.kernels.ops import quantize_qtensor
+from repro.models import (decode_loop, init_cache, prefill_into_slot,
+                          reset_slot)
+from repro.models.common import ModelConfig
+from .engine import mask_chunk_emissions
+
+logger = logging.getLogger("repro.serving.scheduler")
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request entering the queue.
+
+    ``arrival_time`` is seconds relative to the serve-loop start (0 =
+    already waiting); the scheduler admits a request only once its
+    arrival has passed, which is how benchmarks replay Poisson traffic.
+    ``seed`` drives this request's private sampling chain — a sampled
+    request reproduces ``ServeEngine(rng_seed=seed)`` serving it alone.
+    """
+    uid: int
+    tokens: np.ndarray                  # (T,) int32 prompt
+    max_new: int
+    temperature: float = 0.0
+    stop_token: Optional[int] = None
+    arrival_time: float = 0.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    uid: int
+    tokens: np.ndarray                  # (n_generated,) int32
+    n_generated: int
+    queue_delay: float                  # arrival -> admission (s)
+    ttft: float                         # arrival -> first token (s)
+    decode_seconds: float               # admission -> completion (s)
+
+    @property
+    def decode_tok_s(self) -> float:
+        return self.n_generated / max(self.decode_seconds, 1e-9)
+
+
+class SlotScheduler:
+    """FIFO queue + free-slot bookkeeping (admission policy lives here).
+
+    Deliberately dumb-but-observable: first-come-first-served admission
+    at chunk boundaries. Smarter policies (shortest-prompt-first,
+    priority lanes) only need to override ``next_admission``.
+    """
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.queue: Deque[Request] = collections.deque()
+        self.free: List[int] = list(range(n_slots))
+        self.active: Dict[int, Request] = {}
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def next_admission(self, now: float) -> Optional[Tuple[int, Request]]:
+        """Pop (slot, request) if a slot is free and a request has arrived."""
+        if not self.free or not self.queue:
+            return None
+        if self.queue[0].arrival_time > now:
+            return None
+        slot = self.free.pop(0)
+        req = self.queue.popleft()
+        self.active[slot] = req
+        return slot, req
+
+    def release(self, slot: int) -> Request:
+        req = self.active.pop(slot)
+        self.free.append(slot)
+        return req
+
+    def next_arrival(self) -> Optional[float]:
+        return self.queue[0].arrival_time if self.queue else None
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self.active)
+
+
+class ContinuousEngine:
+    """Continuous-batching serving over one persistent B-slot device cache.
+
+    The decode hot loop is the same on-device chunked ``lax.scan`` as
+    ``ServeEngine`` — but between chunks the scheduler admits/evicts, so
+    slots run RAGGED: per-slot positions, per-slot temperature/stop/
+    max_new vectors, per-slot PRNG keys. Finished slots keep decoding
+    until evicted (their emissions are masked on device, exactly like the
+    fixed engine's done rows), so throughput is bounded by slot
+    occupancy, not by the slowest request in an arbitrary batch.
+
+    Compile caching: one decode program per chunk length, one prefill
+    program per distinct prompt length (prompts are NOT padded — padding
+    would change prefill numerics and break the solo-oracle guarantee).
+    Serve traffic with bucketed prompt lengths to bound compiles.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, policy: QuantPolicy,
+                 n_slots: int = 4, max_len: int = 2048, chunk: int = 16,
+                 warn_compile: bool = True):
+        self.cfg = cfg
+        self.policy = policy
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.chunk = chunk
+        self.params = (direct_cast_tree(params, policy,
+                                        quantize_fn=quantize_qtensor)
+                       if policy.weight_fmt else params)
+        kv = policy.kv_fmt
+        self._kv = kv
+        self._prefill = jax.jit(functools.partial(
+            self._admit_fn, cfg=cfg, kv_fmt=kv, max_len=max_len))
+        self._reset = jax.jit(functools.partial(reset_slot, cfg))
+        self._chunk_jit = jax.jit(
+            functools.partial(self._chunk_fn, cfg=cfg, kv_fmt=kv),
+            static_argnames=("n_steps", "greedy"))
+        self.cache = init_cache(cfg, n_slots, max_len, kv)
+        self._seen_prompt_lens: set = set()
+        self._warn_compile = warn_compile
+        # host-visible slot state (tiny; re-uploaded each chunk call)
+        self._tok = np.zeros((n_slots,), np.int32)
+        self._keys = np.zeros((n_slots, 2), np.uint32)
+        self._done = np.ones((n_slots,), bool)      # all parked
+        self._n_gen = np.zeros((n_slots,), np.int32)
+        self._max_new = np.zeros((n_slots,), np.int32)
+        self._temp = np.zeros((n_slots,), np.float32)
+        self._stop = np.full((n_slots,), -1, np.int32)
+
+    # -- jitted bodies ------------------------------------------------------
+
+    @staticmethod
+    def _admit_fn(params, batch, cache, slot, key, temperature,
+                  *, cfg, kv_fmt, max_len):
+        """Prefill one request into ``slot`` and sample its first token.
+
+        One dispatch per admission: batch-1 prefill, slot scatter, and the
+        first-token sample (argmax, or categorical on the request's OWN
+        key chain — the same ``split`` sequence the solo engine walks).
+        """
+        logits, new_cache = prefill_into_slot(cfg, params, batch, cache,
+                                              slot, max_len, kv_fmt)
+        greedy = jnp.argmax(logits, axis=-1)
+        key2, sub = jax.random.split(key)
+        safe = jnp.where(temperature > 0, temperature, 1.0)
+        sampled = jax.random.categorical(sub, logits / safe, axis=-1)
+        tok0 = jnp.where(temperature > 0, sampled[0], greedy[0])
+        key_out = jnp.where(temperature > 0, key2, key)
+        return tok0.astype(jnp.int32), key_out, new_cache
+
+    @staticmethod
+    def _chunk_fn(params, tok, cache, keys, done, n_gen, max_new,
+                  temperature, stop, *, cfg, kv_fmt, n_steps: int,
+                  greedy: bool):
+        """One dispatch = ``n_steps`` ragged decode steps, fully on device.
+
+        Same emission semantics as ``ServeEngine._chunk_fn`` plus a
+        per-slot ``max_new`` budget: step i of slot b is live iff the slot
+        was not done at entry, no stop token landed strictly earlier in
+        the chunk, and its budget ``n_gen + i < max_new`` still holds —
+        so a slot emits exactly the tokens the solo host loop would.
+        PRNG keys are PER SLOT ((B, 2) uint32, vmapped split per step):
+        each slot's chain is its request's seed chain, independent of its
+        neighbors — admission order cannot perturb sampling. ``greedy``
+        (static: no sampled slot is live this chunk) skips the per-step
+        vmapped split+categorical — on CPU the per-slot threefry chain
+        costs ~2x decode itself, and greedy slots never read their keys.
+        """
+        def split_fn(ks):
+            if greedy:          # keys untouched; sampled slots don't exist
+                return ks, ks
+            s = jax.vmap(jax.random.split)(ks)          # (B, 2, 2)
+            return s[:, 0], s[:, 1]
+
+        def sample(logits, subs):
+            g = jnp.argmax(logits, axis=-1)
+            if greedy:
+                return g
+            safe = jnp.where(temperature > 0, temperature, 1.0)
+            s = jax.vmap(jax.random.categorical)(subs,
+                                                 logits / safe[:, None])
+            return jnp.where(temperature > 0, s, g)
+
+        toks, tok, cache, keys = decode_loop(
+            cfg, params, tok, cache, n_steps, kv_fmt, sample, keys,
+            split_fn=split_fn)
+        emitted, n_gen, done = mask_chunk_emissions(toks, done, n_gen,
+                                                    stop, max_new)
+        return emitted, tok, cache, keys, done, n_gen
+
+    # -- host loop ----------------------------------------------------------
+
+    def _admit(self, slot: int, req: Request, now: float,
+               clock) -> Dict[str, Any]:
+        t = len(req.tokens)
+        if self._warn_compile and t not in self._seen_prompt_lens:
+            self._seen_prompt_lens.add(t)
+            logger.info("first prompt of length %d: compiling prefill "
+                        "(bucket prompt lengths to bound compiles)", t)
+        batch = {"tokens": np.asarray(req.tokens, np.int32)[None]}
+        key = jax.random.PRNGKey(req.seed)
+        tok0, key, self.cache = self._prefill(
+            self.params, batch, self.cache, jnp.int32(slot), key,
+            jnp.float32(req.temperature))
+        tok0 = int(tok0)
+        self._tok[slot] = tok0
+        self._keys[slot] = np.asarray(key, np.uint32)
+        self._done[slot] = False
+        self._n_gen[slot] = 0
+        self._max_new[slot] = req.max_new
+        self._temp[slot] = req.temperature
+        self._stop[slot] = -1 if req.stop_token is None else req.stop_token
+        admit_done = clock()
+        logger.info("admit uid=%d slot=%d prompt=%d max_new=%d "
+                    "queue_delay=%.3fs", req.uid, slot, t, req.max_new,
+                    now - req.arrival_time)
+        return {"admit_time": now, "first_token_time": admit_done,
+                "out": [], "prev_n_gen": 0}
+
+    def serve(self, requests: List[Request],
+              progress_cb=None) -> List[RequestResult]:
+        """Drain ``requests`` (honoring arrival times) through the slots.
+
+        Returns one ``RequestResult`` per request (same order as
+        completion). The loop: admit into every free slot whose request
+        has arrived -> run one decode chunk over ALL slots -> harvest
+        emissions per slot -> evict finished slots (park pos, zero SSM
+        state) -> repeat. Idle gaps (queue non-empty but nothing arrived)
+        sleep to the next arrival instead of spinning.
+        """
+        sched = SlotScheduler(self.n_slots)
+        for r in requests:
+            # reject overflow up front: a full-cache slot would clamp-write
+            # its last row and return garbage with no error (SWA caches are
+            # window-sized rings — they wrap instead of overflowing)
+            if not self.cfg.sliding_window and \
+                    len(r.tokens) + r.max_new > self.max_len:
+                raise ValueError(
+                    f"request uid={r.uid}: prompt ({len(r.tokens)}) + "
+                    f"max_new ({r.max_new}) exceeds max_len "
+                    f"({self.max_len})")
+            sched.submit(r)
+        t0 = time.time()
+        clock = lambda: time.time() - t0   # noqa: E731  (virtual now)
+        state: Dict[int, Dict[str, Any]] = {}
+        results: List[RequestResult] = []
+
+        while sched.has_work:
+            now = clock()
+            while True:
+                adm = sched.next_admission(now)
+                if adm is None:
+                    break
+                slot, req = adm
+                state[slot] = self._admit(slot, req, now, clock)
+            if not sched.active:
+                nxt = sched.next_arrival()
+                assert nxt is not None
+                time.sleep(max(nxt - clock(), 0.0))
+                continue
+
+            emitted, tok, self.cache, keys, done, n_gen = self._chunk_jit(
+                self.params, jnp.asarray(self._tok), self.cache,
+                jnp.asarray(self._keys), jnp.asarray(self._done),
+                jnp.asarray(self._n_gen), jnp.asarray(self._max_new),
+                jnp.asarray(self._temp), jnp.asarray(self._stop),
+                n_steps=self.chunk,
+                greedy=bool((self._temp == 0.0).all()))
+            # one host transfer per chunk; copies (not views) because the
+            # admission path mutates these slotwise between chunks
+            emitted, tok, keys, done, n_gen = jax.device_get(
+                (emitted, tok, keys, done, n_gen))
+            self._tok = np.array(tok)
+            self._keys = np.array(keys, np.uint32)
+            self._done = np.array(done)
+            self._n_gen = np.array(n_gen)
+            now = clock()
+
+            for slot in list(sched.active):
+                st = state[slot]
+                delta = int(self._n_gen[slot]) - st["prev_n_gen"]
+                st["out"].extend(emitted[slot, :delta].tolist())
+                st["prev_n_gen"] = int(self._n_gen[slot])
+                if self._done[slot]:
+                    req = sched.release(slot)
+                    self.cache = self._reset(self.cache, jnp.int32(slot))
+                    self._temp[slot] = 0.0   # parked slots don't hold the
+                    self._stop[slot] = -1    # chunk in sampled mode
+                    results.append(RequestResult(
+                        uid=req.uid,
+                        tokens=np.asarray(st["out"], np.int32),
+                        n_generated=len(st["out"]),
+                        queue_delay=st["admit_time"] - req.arrival_time,
+                        ttft=st["first_token_time"] - req.arrival_time,
+                        decode_seconds=now - st["admit_time"]))
+                    logger.info("finish uid=%d slot=%d n=%d ttft=%.3fs "
+                                "tok_s=%.1f", req.uid, slot,
+                                len(st["out"]), results[-1].ttft,
+                                results[-1].decode_tok_s)
+                    del state[slot]
+            if progress_cb is not None:
+                progress_cb(self, sched)
+        return results
