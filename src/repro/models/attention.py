@@ -142,6 +142,48 @@ def self_attention(cfg: ModelConfig, p, x, positions, *, causal=True,
     return dense(o, p[f"{prefix}wo"]), k, v
 
 
+def self_attention_resume(cfg: ModelConfig, p, x, lane_k, lane_v, positions,
+                          offset, kv_valid, *, window=None, prefix: str = "",
+                          chunk: int = 1024):
+    """Resumable prefill attention: one (1, P) chunk against the lane.
+
+    ``lane_k``/``lane_v`` are a fixed-size dense scratch holding the
+    in-flight prompt's K/V in NATURAL order (previous chunks at rows
+    [0, offset)).  The chunk's K/V is computed exactly as
+    ``self_attention`` would (rope at the global ``positions``, same
+    fake-quant hook), stored at ``offset``, and the chunk attends
+    causally from ``q_offset=offset`` over rows [0, kv_valid).  Rows
+    beyond ``kv_valid`` are masked to EXACT-zero softmax contributions
+    inside ``attend_chunked`` (p is where'd to 0.0, alpha to 1.0), so the
+    fixed-size buffer — including stale rows from a previous request —
+    never perturbs numerics: the outputs are bit-identical to the rows
+    a whole-prompt ``self_attention`` produces.
+
+    Returns (attn out (1, P, D), k, v (1, P, KVH, hd) rope'd chunk rows
+    for the live-cache write, lane_k', lane_v').
+    """
+    b, t, _ = x.shape
+    q, k, v = gqa_project(cfg, p, x, prefix)
+    cos, sin = rope_freqs(positions, cfg.hd, cfg.rope_theta)
+    q = apply_rope(q.reshape(b, t, -1, cfg.hd), cos, sin).reshape(q.shape)
+    k = apply_rope(k, cos, sin)
+    if cfg.kv_sim_fmt:  # quantized-KV inference simulation (paper §7.1)
+        from repro.core.quantize import fake_quant
+        k = fake_quant(k, cfg.kv_sim_fmt, axis=-1)
+        v = fake_quant(v, cfg.kv_sim_fmt, axis=-1)
+    lane_k = jax.lax.dynamic_update_slice(
+        lane_k, k.astype(lane_k.dtype), (0, offset, 0, 0))
+    lane_v = jax.lax.dynamic_update_slice(
+        lane_v, v.astype(lane_v.dtype), (0, offset, 0, 0))
+    q = q * (1.0 / math.sqrt(cfg.hd))
+    o = attend_chunked(q.astype(x.dtype), lane_k.astype(x.dtype),
+                       lane_v.astype(x.dtype), causal=True, window=window,
+                       q_offset=offset, kv_valid=kv_valid,
+                       chunk_q=chunk, chunk_kv=chunk)
+    o = o.reshape(b, t, cfg.n_heads * cfg.hd).astype(x.dtype)
+    return dense(o, p[f"{prefix}wo"]), k, v, lane_k, lane_v
+
+
 def cross_attention(cfg: ModelConfig, p, x, mem_k, mem_v, *, prefix="cross_",
                     chunk: int = 1024):
     """x (B,T,D) attends to precomputed memory K/V (B,S,KVH,hd), no rope."""

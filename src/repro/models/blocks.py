@@ -15,11 +15,11 @@ import jax
 import jax.numpy as jnp
 
 from .attention import (attend_chunked, cross_attention, gqa_project,
-                        memory_kv, self_attention)
+                        memory_kv, self_attention, self_attention_resume)
 from .common import (ModelConfig, apply_rope, dense, init_attn, init_mlp,
                      ninit, rmsnorm, rope_freqs, split_keys, swiglu)
-from .kvcache import attend_decode, write_token
-from .moe import init_moe, moe_ffn
+from .kvcache import attend_decode, write_prefill_at, write_token
+from .moe import init_moe, moe_ffn, moe_ffn_decode
 from .ssm import init_mamba, mamba_block, mamba_step
 
 Params = Dict[str, Any]
@@ -112,15 +112,97 @@ def layer_forward(cfg: ModelConfig, p: Params, x, positions, kind: str,
 
 
 # ---------------------------------------------------------------------------
+# chunked-prefill body (one fixed-shape chunk of the in-flight prompt)
+# ---------------------------------------------------------------------------
+
+def _slot_put(buf, val, slot):
+    """Write one slot's row of a (B, ...) state buffer."""
+    idx = (slot,) + (0,) * (buf.ndim - 1)
+    return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype), idx)
+
+
+def layer_prefill_chunk(cfg: ModelConfig, p: Params, x, lane_l, cache_l,
+                        slot, positions, offset, n_valid, kind: str,
+                        kv_fmt: Optional[str], first):
+    """One layer of the resumable chunked prefill. x (1, P, D).
+
+    Mirrors ``layer_forward`` over a single (1, P) chunk of the prompt:
+    attention reads the lane's dense natural-order K/V scratch (previous
+    chunks + this one) so every hidden state matches the whole-prompt
+    prefill bit for bit; the chunk's rope'd K/V rows are ALSO written
+    (quantized when ``kv_fmt``) into the live cache slot at their global
+    offsets, and the SSM/conv recurrent carry rides the lane across
+    chunks (``first`` — a traced ``offset == 0`` — zeroes it, matching
+    the whole-prompt ``h0=None`` init).  Rows past ``n_valid`` are
+    fixed-shape padding: identity transitions for the SSM, causally
+    masked for attention, dropped by the cache scatter.
+
+    Returns (x, new_lane_l, new_cache_l).
+    """
+    from repro.sharding.ctx import constrain_act
+    x = constrain_act(x)
+    new_lane = dict(lane_l)
+    new_cache = dict(cache_l)
+    h = rmsnorm(x, p["ln1_scale"], cfg.norm_eps)
+
+    attn_y = None
+    if kind != "ssm":
+        attn_y, kk, vv, lane_k, lane_v = self_attention_resume(
+            cfg, p, h, lane_l["k"], lane_l["v"], positions, offset,
+            kv_valid=jnp.asarray(offset + n_valid, jnp.int32).reshape(1),
+            window=cfg.sliding_window)
+        new_lane.update(k=lane_k, v=lane_v)
+        attn_entries = {n: cache_l[n] for n in cache_l
+                        if not n.startswith(("h", "conv"))}
+        new_cache.update(write_prefill_at(cfg, attn_entries, kk, vv, slot,
+                                          offset, n_valid, kv_fmt))
+
+    ssm_y = None
+    if kind in ("ssm", "hybrid"):
+        zero = jnp.zeros((), lane_l["h"].dtype)
+        h0 = jnp.where(first, zero, lane_l["h"])
+        conv0 = jnp.where(first, jnp.zeros((), lane_l["conv"].dtype),
+                          lane_l["conv"])
+        ssm_y, hf, conv = mamba_block(cfg, p, h, h0=h0, conv0=conv0,
+                                      n_valid=n_valid)
+        new_lane.update(h=hf, conv=conv)
+        # the slot's in-cache recurrent state tracks the lane every chunk
+        # (not-live slots are frozen through decode chunks, so the value
+        # standing when the slot goes live is the lane's final carry)
+        new_cache.update(h=_slot_put(cache_l["h"], hf, slot),
+                         conv=_slot_put(cache_l["conv"], conv, slot))
+
+    if kind == "ssm":
+        return x + ssm_y, new_lane, new_cache
+    if kind == "hybrid":
+        x = x + 0.5 * (attn_y + ssm_y)
+    else:
+        x = x + attn_y
+    h2 = rmsnorm(x, p["ln2_scale"], cfg.norm_eps)
+    if kind == "moe":
+        # chunk-local capacity (cap over P tokens, not the whole prompt):
+        # padding is excluded from routing, but capacity still depends on
+        # the chunking — MoE prefill is NOT in the chunked-vs-whole
+        # bit-equality contract (DESIGN.md §9)
+        y2, _ = moe_ffn(cfg, p, h2,
+                        valid=jnp.arange(h2.shape[1]) < n_valid)
+        return x + y2, new_lane, new_cache
+    return (x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"]),
+            new_lane, new_cache)
+
+
+# ---------------------------------------------------------------------------
 # decode bodies (one token, cached)
 # ---------------------------------------------------------------------------
 
 def _attn_decode(cfg: ModelConfig, p: Params, h, layer_cache, pos,
-                 kv_fmt: Optional[str], prefix: str = ""):
+                 kv_fmt: Optional[str], prefix: str = "", live=None):
     """h (B, 1, D) -> (attn out (B, 1, D), new attn cache entries).
 
     ``pos`` is (B,) int32 — each slot ropes, writes and attends at its own
-    position (a scalar broadcasts for legacy callers).
+    position (a scalar broadcasts for legacy callers).  ``live`` (B,)
+    bool suppresses cache writes for not-live slots (mid-prefill / parked
+    — see ``write_token``); live slots are bit-identical to ``live=None``.
     """
     b = h.shape[0]
     q, k1, v1 = gqa_project(cfg, p, h, prefix)
@@ -130,7 +212,7 @@ def _attn_decode(cfg: ModelConfig, p: Params, h, layer_cache, pos,
     q = apply_rope(q.reshape(b, 1, -1, cfg.hd), cos, sin).reshape(q.shape)
     k1 = apply_rope(k1, cos, sin)
     new_cache = write_token(cfg, layer_cache, k1.astype(jnp.float32),
-                            v1.astype(jnp.float32), pos, kv_fmt)
+                            v1.astype(jnp.float32), pos, kv_fmt, live=live)
     qh = q.reshape(b, cfg.n_heads, cfg.hd)
     o = attend_decode(cfg, new_cache, qh, pos, kv_fmt)
     o = o.reshape(b, 1, cfg.n_heads * cfg.hd).astype(h.dtype)
@@ -152,16 +234,32 @@ def _cross_decode(cfg: ModelConfig, p: Params, h, mem_k, mem_v):
     return dense(o, p["cross_wo"])
 
 
+def _freeze_state(new, old, live):
+    """Keep a not-live slot's recurrent state (leading batch axis)."""
+    if live is None:
+        return new
+    keep = live.reshape((-1,) + (1,) * (new.ndim - 1))
+    return jnp.where(keep, new, old)
+
+
 def layer_decode(cfg: ModelConfig, p: Params, x, layer_cache, pos,
-                 kind: str, kv_fmt: Optional[str]):
-    """x (B, 1, D) -> (x, new layer_cache)."""
+                 kind: str, kv_fmt: Optional[str], live=None):
+    """x (B, 1, D) -> (x, new layer_cache).
+
+    ``live`` (B,) bool gates STATE mutation per slot: not-live slots
+    (mid-chunked-prefill or parked) still flow through the batch — fixed
+    shapes — but neither write K/V rows nor integrate SSM state, so the
+    prefill lane's incremental cache fills survive the interleaved decode
+    chunks.  ``live=None`` (solo engines) is byte-for-byte the old path.
+    """
     new_cache = dict(layer_cache) if layer_cache else {}
     h = rmsnorm(x, p["ln1_scale"], cfg.norm_eps)
 
     if kind == "ssm":
         y, hf, conv = mamba_step(cfg, p, h, layer_cache["h"],
                                  layer_cache["conv"])
-        new_cache.update(h=hf, conv=conv)
+        new_cache.update(h=_freeze_state(hf, layer_cache["h"], live),
+                         conv=_freeze_state(conv, layer_cache["conv"], live))
         return x + y, new_cache
 
     if kind == "cross":
@@ -174,18 +272,20 @@ def layer_decode(cfg: ModelConfig, p: Params, x, layer_cache, pos,
     if kind == "hybrid":
         attn_cache = {n: layer_cache[n] for n in layer_cache
                       if not n.startswith(("h", "conv"))}
-        attn_y, attn_new = _attn_decode(cfg, p, h, attn_cache, pos, kv_fmt)
+        attn_y, attn_new = _attn_decode(cfg, p, h, attn_cache, pos, kv_fmt,
+                                        live=live)
         ssm_y, hf, conv = mamba_step(cfg, p, h, layer_cache["h"],
                                      layer_cache["conv"])
         new_cache.update(attn_new)
-        new_cache.update(h=hf, conv=conv)
+        new_cache.update(h=_freeze_state(hf, layer_cache["h"], live),
+                         conv=_freeze_state(conv, layer_cache["conv"], live))
         x = x + 0.5 * (attn_y + ssm_y)
         h2 = rmsnorm(x, p["ln2_scale"], cfg.norm_eps)
         return x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"]), new_cache
 
     attn_cache = {n: layer_cache[n] for n in layer_cache
                   if not n.startswith("mem_")}
-    y, attn_new = _attn_decode(cfg, p, h, attn_cache, pos, kv_fmt)
+    y, attn_new = _attn_decode(cfg, p, h, attn_cache, pos, kv_fmt, live=live)
     new_cache.update(attn_new)
     x = x + y
     if kind == "encdec":
@@ -194,6 +294,6 @@ def layer_decode(cfg: ModelConfig, p: Params, x, layer_cache, pos,
                               layer_cache["mem_v"])
     h2 = rmsnorm(x, p["ln2_scale"], cfg.norm_eps)
     if kind == "moe":
-        y2, _ = moe_ffn(cfg, p, h2)
+        y2, _ = moe_ffn_decode(cfg, p, h2)
         return x + y2, new_cache
     return x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"]), new_cache

@@ -99,6 +99,42 @@ def write_prefill(cfg: ModelConfig, k, v, kv_fmt: Optional[str],
             "v_packed": place(vp), "v_meta": place(vm)}
 
 
+def write_prefill_at(cfg: ModelConfig, layer_cache, k, v, slot, offset,
+                     n_valid, kv_fmt: Optional[str]):
+    """Scatter one prefill chunk's K/V (1, P, KVH, hd) into a LIVE slot.
+
+    The chunked-prefill lane's cache write: chunk row i lands at global
+    position ``offset + i`` of slot ``slot`` — row ``(offset+i) % window``
+    for SWA rings, row ``offset+i`` otherwise — quantized per token when
+    ``kv_fmt`` is set (blocks run along head_dim, entirely inside one
+    row, so the packed bytes are bit-identical to a whole-prompt cast).
+    Rows >= ``n_valid`` (the padded tail of a fixed-shape partial chunk)
+    are routed out of range and DROPPED by the scatter, so a ragged final
+    chunk never touches rows it doesn't own.  Requires P <= window for
+    ring caches (distinct in-chunk rows; the engine asserts it).
+    """
+    w = cfg.sliding_window
+    pch = k.shape[1]
+    assert not w or pch <= w, (pch, w)   # duplicate ring rows corrupt
+    s = next(iter(layer_cache.values())).shape[1]
+    gpos = offset + jnp.arange(pch, dtype=jnp.int32)
+    row = (gpos % w) if w else gpos
+    row = jnp.where(jnp.arange(pch) < n_valid, row, s)   # OOB -> dropped
+
+    def put(buf, val):
+        return buf.at[slot, row].set(val[0].astype(buf.dtype), mode="drop")
+
+    if kv_fmt is None:
+        return {"k": put(layer_cache["k"], k),
+                "v": put(layer_cache["v"], v)}
+    kp, km = _quantize_kv(k, kv_fmt)
+    vp, vm = _quantize_kv(v, kv_fmt)
+    return {"k_packed": put(layer_cache["k_packed"], kp),
+            "k_meta": put(layer_cache["k_meta"], km),
+            "v_packed": put(layer_cache["v_packed"], vp),
+            "v_meta": put(layer_cache["v_meta"], vm)}
+
+
 def _per_slot(pos, b: int):
     """Normalize a traced position to a per-slot (B,) int32 vector."""
     pos = jnp.asarray(pos, jnp.int32)
@@ -106,23 +142,42 @@ def _per_slot(pos, b: int):
 
 
 def write_token(cfg: ModelConfig, layer_cache, k1, v1, pos,
-                kv_fmt: Optional[str]):
+                kv_fmt: Optional[str], live=None):
     """Insert one token's K/V (B, 1, KVH, hd) at per-slot positions.
 
     ``pos`` is (B,) int32 (a scalar broadcasts): each batch slot writes at
     its OWN ring slot (``pos[b] % window``), so ragged slots never touch a
     neighbor's rows — a vmapped ``dynamic_update_slice`` per sequence.
+
+    ``live`` (B,) bool, when given, SUPPRESSES slot b's write for
+    ``live[b] == False`` (the row keeps its old value).  The continuous
+    engine marks mid-prefill and parked slots not-live: they still step
+    through the decode scan (fixed batch shape) but must not clobber
+    rows the chunked-prefill lane owns — a ring slot's garbage write
+    would land on already-prefilled rows.  Live slots see bit-identical
+    writes, so ``live=None`` callers (solo engine) are unchanged.
     """
     w = cfg.sliding_window
     pos = _per_slot(pos, k1.shape[0])
     slot = (pos % w) if w else pos
 
     def upd(buf, val):
-        def one(row, v, s):
+        if live is None:
+            def one(row, v, s):
+                idx = (s,) + (0,) * (row.ndim - 1)
+                return jax.lax.dynamic_update_slice(
+                    row, v.astype(row.dtype), idx)
+            return jax.vmap(one)(buf, val, slot)
+
+        # gate at the ROW level: a not-live slot writes its old row back,
+        # so the update stays a single in-place-able dynamic_update_slice
+        # per slot — no full-cache select on the decode hot path
+        def one(row, v, s, lv):
             idx = (s,) + (0,) * (row.ndim - 1)
-            return jax.lax.dynamic_update_slice(row, v.astype(row.dtype),
-                                                idx)
-        return jax.vmap(one)(buf, val, slot)
+            cur = jax.lax.dynamic_slice(row, idx, v.shape)
+            return jax.lax.dynamic_update_slice(
+                row, jnp.where(lv, v.astype(row.dtype), cur), idx)
+        return jax.vmap(one)(buf, val, slot, live)
 
     if kv_fmt is None:
         return {"k": upd(layer_cache["k"], k1),

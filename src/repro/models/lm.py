@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from .attention import memory_kv
-from .blocks import init_layer, layer_decode, layer_forward
+from .blocks import (init_layer, layer_decode, layer_forward,
+                     layer_prefill_chunk)
 from .common import ModelConfig, dense, ninit, rmsnorm, split_keys
 from .kvcache import ssm_cache_init, write_prefill
 
@@ -235,24 +236,126 @@ def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
     return logits[:, 0], cache
 
 
+# ---------------------------------------------------------------------------
+# chunked prefill: resumable fixed-shape partial prefill (the serving lane)
+# ---------------------------------------------------------------------------
+
+def _check_p_chunk(cfg: ModelConfig, p_chunk: int) -> None:
+    """Static lane-chunk invariants, enforced WHERE they break (not only
+    in one engine): a chunk wider than the SWA ring scatters two tokens
+    to the same cache row (silent corruption), and a chunk misaligned
+    with ``ssm_chunk`` regroups the associative scan — breaking the
+    chunked == whole bit-equality contract without an error."""
+    assert not cfg.sliding_window or p_chunk <= cfg.sliding_window, \
+        (p_chunk, cfg.sliding_window)
+    assert cfg.family not in ("ssm", "hybrid") or \
+        p_chunk % cfg.ssm_chunk == 0, (p_chunk, cfg.ssm_chunk)
+
+
+def init_lane(cfg: ModelConfig, max_len: int, p_chunk: int
+              ) -> Dict[str, Any]:
+    """Allocate the chunked-prefill lane scratch (batch-1, fixed shapes).
+
+    The lane holds the ONE in-flight prompt's state between chunks:
+    a dense natural-order K/V scratch (what the next chunk attends over —
+    the same full-precision values the whole-prompt prefill sees, which
+    is what makes chunked == whole bit for bit even when the live cache
+    is NxFP-packed) plus the SSM/conv recurrent carry.  Stale contents
+    need no reset between requests: attention masks beyond-valid rows to
+    exact-zero contributions and ``prefill_chunk`` zeroes the recurrent
+    carry at ``offset == 0``.
+    """
+    assert cfg.family in _KIND, (cfg.family, "chunked prefill serves the "
+                                 "scanned-stack families")
+    _check_p_chunk(cfg, p_chunk)
+    s_p = -(-max_len // p_chunk) * p_chunk
+    lane: Dict[str, Any] = {}
+    if cfg.family != "ssm":
+        z = jnp.zeros((cfg.n_layers, 1, s_p, cfg.n_kv_heads, cfg.hd),
+                      cfg.dtype)
+        lane.update(k=z, v=z)
+    if cfg.family in ("ssm", "hybrid"):
+        lane.update(ssm_cache_init(cfg, cfg.n_layers, 1))
+    return lane
+
+
+def prefill_chunk(cfg: ModelConfig, params: Params, tokens, cache, slot,
+                  offset, n_valid, lane, kv_fmt: Optional[str],
+                  with_head: bool = True):
+    """Advance the in-flight prefill by ONE fixed-shape (1, P) chunk.
+
+    ``tokens`` holds prompt positions [offset, offset + P) (tail-padded
+    past ``n_valid``); K/V lands in slot ``slot`` of the LIVE cache at
+    the global offsets (dense or NxFP-packed via the fused quantize
+    path), the lane carries the dense attention scratch and SSM state to
+    the next chunk, and the returned logits are the hidden state at the
+    chunk's LAST VALID row through the head — on the final chunk, bit-
+    identical to the whole-prompt ``prefill``'s last-token logits.  The
+    shapes are offset-independent: one compiled program serves every
+    chunk of every prompt length (the admission-stall bound the serving
+    lane exists for — no per-length retraces).
+
+    ``with_head=False`` (static) skips the (D, V) head matmul and
+    returns the last-valid HIDDEN row (1, D) instead — only the final
+    chunk's logits are ever read, and at real vocab sizes the head is a
+    whole layer's worth of FLOPs per chunk.
+
+    Returns (logits (1, V) — or hidden (1, D) — , new_cache, new_lane).
+    """
+    b, pch = tokens.shape
+    assert b == 1, tokens.shape
+    _check_p_chunk(cfg, pch)
+    fam = cfg.family
+    kind = _KIND[fam]
+    x = _embed(cfg, params, tokens)
+    positions = (jnp.asarray(offset, jnp.int32)
+                 + jnp.arange(pch, dtype=jnp.int32))
+    first = jnp.asarray(offset == 0)
+
+    def body(h, xs):
+        lp, lane_l, cache_l = xs
+        h, new_lane_l, new_cache_l = layer_prefill_chunk(
+            cfg, lp, h, lane_l, cache_l, slot, positions, offset, n_valid,
+            kind, kv_fmt, first)
+        return h, (new_lane_l, new_cache_l)
+
+    x, (new_lane, new_layers) = jax.lax.scan(
+        body, x, (params["layers"], lane, cache["layers"]))
+    # the slot's pos stays parked while PREFILLING (its decode-chunk
+    # writes are live-masked); the engine sets pos[slot] at completion
+    new_cache = dict(cache, layers=new_layers)
+    last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+    if not with_head:
+        return last[:, 0], new_cache, new_lane
+    logits = _head(cfg, params, last)
+    return logits[:, 0], new_cache, new_lane
+
+
 def decode_step(cfg: ModelConfig, params: Params, tokens, cache,
-                kv_fmt: Optional[str]) -> Tuple[jax.Array, Dict[str, Any]]:
+                kv_fmt: Optional[str], live=None
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
     """tokens (B, 1); cache from prefill. Returns (logits (B, V), new cache).
 
     ``cache["pos"]`` is (B,) — slots at ragged positions decode together;
-    each ropes/writes/attends at its own offset.
+    each ropes/writes/attends at its own offset.  ``live`` (B,) bool
+    (continuous engine) freezes not-live slots' cache state — position,
+    K/V row writes, SSM integration — so mid-prefill and parked slots
+    ride through the fixed-shape batch without clobbering anything; live
+    slots are bit-identical to ``live=None``.
     """
     pos = cache["pos"]
     x = _embed(cfg, params, tokens)
     fam = cfg.family
-    new_cache: Dict[str, Any] = {"pos": pos + 1}
+    step = 1 if live is None else live.astype(jnp.int32)
+    new_cache: Dict[str, Any] = {"pos": pos + step}
 
     if fam in _KIND or fam == "audio":
         kind = _KIND.get(fam, "encdec")
 
         def body(h, xs):
             lp, lc = xs
-            h, nc = layer_decode(cfg, lp, h, lc, pos, kind, kv_fmt)
+            h, nc = layer_decode(cfg, lp, h, lc, pos, kind, kv_fmt,
+                                 live=live)
             return h, nc
 
         x, layer_caches = jax.lax.scan(
@@ -264,12 +367,13 @@ def decode_step(cfg: ModelConfig, params: Params, tokens, cache,
 
             def inner(hh, ys):
                 lp, lc = ys
-                hh, nc = layer_decode(cfg, lp, hh, lc, pos, "dense", kv_fmt)
+                hh, nc = layer_decode(cfg, lp, hh, lc, pos, "dense", kv_fmt,
+                                      live=live)
                 return hh, nc
 
             h, self_new = jax.lax.scan(inner, h, (lp_self, lc_self))
             h, cross_new = layer_decode(cfg, lp_cross, h, lc_cross, pos,
-                                        "cross", kv_fmt)
+                                        "cross", kv_fmt, live=live)
             return h, (self_new, cross_new)
 
         x, (self_caches, cross_caches) = jax.lax.scan(
@@ -286,7 +390,7 @@ def decode_step(cfg: ModelConfig, params: Params, tokens, cache,
 
 def decode_loop(cfg: ModelConfig, params: Params, tok, cache, n_steps: int,
                 kv_fmt: Optional[str], sample_fn, key,
-                split_fn=jax.random.split):
+                split_fn=jax.random.split, live=None):
     """Run ``n_steps`` decode steps as ONE on-device ``lax.scan``.
 
     The serving hot loop (DESIGN.md §7): the KV cache, logits and sampled
@@ -312,7 +416,8 @@ def decode_loop(cfg: ModelConfig, params: Params, tok, cache, n_steps: int,
     def step(carry, _):
         t, c, k = carry
         k, sub = split_fn(k)
-        logits, c = decode_step(cfg, params, t[:, None], c, kv_fmt)
+        logits, c = decode_step(cfg, params, t[:, None], c, kv_fmt,
+                                live=live)
         nxt = sample_fn(logits, sub).astype(jnp.int32)
         return (nxt, c, k), t
 

@@ -51,8 +51,33 @@ def _expert_mm(x, w):
         preferred_element_type=jnp.float32).astype(x.dtype)
 
 
-def moe_ffn(cfg: ModelConfig, p, x) -> Tuple[jax.Array, jax.Array]:
-    """x (B, T, D) -> (y (B, T, D), load-balance aux loss (scalar f32))."""
+def moe_ffn_decode(cfg: ModelConfig, p, x) -> Tuple[jax.Array, jax.Array]:
+    """Decode-path MoE with PER-SLOT expert capacity. x (B, 1, D).
+
+    ``moe_ffn`` computes capacity and arrival order over the whole
+    flattened batch (cap = ceil(k * B*T * cf / E), position-within-expert
+    cumsummed across rows), so one slot's routing depends on its batch
+    neighbors — the one place the decode stack coupled rows, which is why
+    the continuous-batching bit-equality oracle had to exclude
+    ``family="moe"``.  Decode is T=1, so vmapping the batch axis gives
+    every slot the exact routing program a batch-1 engine runs: capacity
+    ceil(k * cf / E) PER ROW, arrival order within the row's own top-k.
+    Solo and continuous decode both route through here, so their outputs
+    coincide bit for bit regardless of who shares the batch.
+    """
+    y, aux = jax.vmap(lambda row: moe_ffn(cfg, p, row[None]))(x)
+    return y[:, 0], jnp.sum(aux)
+
+
+def moe_ffn(cfg: ModelConfig, p, x, valid=None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x (B, T, D) -> (y (B, T, D), load-balance aux loss (scalar f32)).
+
+    ``valid`` (B*T,) bool (chunked-prefill lane): tokens marked invalid —
+    a fixed-shape chunk's padded tail — are routed to the dump slot and
+    excluded from the capacity cumsum, so padding can never steal an
+    expert slot from a real token.  Their outputs are garbage (unused).
+    """
     b, t, d = x.shape
     e, k = cfg.n_experts, cfg.n_experts_active
     n = b * t
@@ -79,9 +104,13 @@ def moe_ffn(cfg: ModelConfig, p, x) -> Tuple[jax.Array, jax.Array]:
     cap = max(int(math.ceil(k * n * cfg.capacity_factor / e)), 1)
     flat_idx = gate_idx.reshape(-1)                           # (N*k,) token-major
     oh = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)         # (N*k, E)
+    if valid is not None:
+        oh = oh * jnp.repeat(valid, k).astype(jnp.int32)[:, None]
     pos = jnp.cumsum(oh, axis=0) - oh                         # arrival order
     pos = jnp.sum(pos * oh, axis=-1)                          # (N*k,)
     keep = pos < cap
+    if valid is not None:
+        keep = keep & jnp.repeat(valid, k)
     slot = jnp.where(keep, flat_idx * cap + pos, ep * cap)    # dump slot
 
     buf = jnp.zeros((ep * cap + 1, d), x.dtype)

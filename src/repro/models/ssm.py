@@ -104,8 +104,15 @@ def _chunked_scan(a, bx, c, h0, chunk: int):
 
 
 def mamba_block(cfg: ModelConfig, p, x, h0=None, conv0=None,
-                prefix: str = "ssm_"):
+                prefix: str = "ssm_", n_valid=None):
     """Full-sequence mamba (train / prefill). x (B, T, D).
+
+    ``n_valid`` (traced scalar, chunked-prefill lane) marks a padded tail:
+    steps >= n_valid become identity transitions (a=1, bx=0 — exactly the
+    constants ``_chunked_scan`` pads with), so ``h_final`` is the state at
+    the last VALID step and the conv tail is sliced at ``n_valid`` instead
+    of ``t`` — a padded partial chunk carries the same recurrent state the
+    unpadded whole-prompt run would.
 
     Returns (out (B, T, D), h_final (B, di, N) f32, conv_state (B, cw-1, di)).
     """
@@ -114,20 +121,29 @@ def mamba_block(cfg: ModelConfig, p, x, h0=None, conv0=None,
     xz = dense(x, p[f"{prefix}in_w"])
     xi, z = jnp.split(xz, 2, axis=-1)                          # (B,T,di)
     if conv0 is not None:  # resume from cached conv tail
-        xi_full = jnp.concatenate([conv0.astype(xi.dtype), xi], axis=1)
-        xc = _causal_conv(xi_full, p[f"{prefix}conv_w"],
+        xi_hist = jnp.concatenate([conv0.astype(xi.dtype), xi], axis=1)
+        xc = _causal_conv(xi_hist, p[f"{prefix}conv_w"],
                           p[f"{prefix}conv_b"], cw)[:, cw - 1:]
     else:
+        xi_hist = jnp.pad(xi, ((0, 0), (cw - 1, 0), (0, 0)))
         xc = _causal_conv(xi, p[f"{prefix}conv_w"], p[f"{prefix}conv_b"], cw)
     xc = jax.nn.silu(xc)
     a, bx, c = _ssm_coeffs(cfg, p, xc, prefix)
+    if n_valid is not None:
+        valid = (jnp.arange(t, dtype=jnp.int32)
+                 < n_valid)[None, :, None, None]
+        a = jnp.where(valid, a, 1.0)
+        bx = jnp.where(valid, bx, 0.0)
     if h0 is None:
         h0 = jnp.zeros((b, di, n), jnp.float32)
     y, hf = _chunked_scan(a, bx, c, h0, cfg.ssm_chunk)
     y = y + xc.astype(jnp.float32) * p[f"{prefix}d_skip"]
     y = y * jax.nn.silu(z.astype(jnp.float32))
+    # tail from the FULL history (carried conv0 included): a resumed
+    # chunk with fewer than cw-1 valid rows owes part of its tail to the
+    # previous chunk, not to zero padding
     conv_tail = jax.lax.dynamic_slice_in_dim(
-        jnp.pad(xi, ((0, 0), (cw - 1, 0), (0, 0))), t, cw - 1, axis=1)
+        xi_hist, t if n_valid is None else n_valid, cw - 1, axis=1)
     return dense(y.astype(x.dtype), p[f"{prefix}out_w"]), hf, conv_tail
 
 

@@ -1,6 +1,8 @@
 from .engine import ServeEngine, GenerationResult
-from .scheduler import (ContinuousEngine, Request, RequestResult,
-                        SlotScheduler)
+from .scheduler import (AdmissionPolicy, ContinuousEngine, FifoPolicy,
+                        Request, RequestResult, ShortestPromptFirst,
+                        SlotScheduler, TtftDeadline)
 
 __all__ = ["ServeEngine", "GenerationResult", "ContinuousEngine",
-           "Request", "RequestResult", "SlotScheduler"]
+           "Request", "RequestResult", "SlotScheduler", "AdmissionPolicy",
+           "FifoPolicy", "ShortestPromptFirst", "TtftDeadline"]

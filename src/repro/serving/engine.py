@@ -51,6 +51,26 @@ _advance_key = jax.jit(lambda key, n: jax.lax.fori_loop(
     0, n, lambda _, k: jax.random.split(k)[0], key))
 
 
+# process-wide jitted-program cache. jax.jit memoizes traces per CALLABLE,
+# so every engine instance that built its own ``jax.jit(partial(...))``
+# wrapper retraced (and recompiled) programs an identical engine had
+# already paid for — benchmark re-instantiations and test suites compile
+# the same prefill/decode/admission programs over and over.  Keying the
+# jitted callable on the static configuration instead makes the cache
+# process-wide: a second engine with the same (cfg, kv_fmt, max_len, ...)
+# reuses both the traces and the per-shape executables under them (mixed
+# prompt lengths share one callable, so each length compiles once per
+# process, not once per engine).
+_PROGRAM_CACHE: Dict[Any, Any] = {}
+
+
+def cached_program(key, build):
+    fn = _PROGRAM_CACHE.get(key)
+    if fn is None:
+        fn = _PROGRAM_CACHE[key] = build()
+    return fn
+
+
 # servers capture/silence straggler + scheduler telemetry through the
 # standard logging tree ("repro.serving" / "repro.serving.scheduler") —
 # no bare prints on the serving path
@@ -112,17 +132,23 @@ class ServeEngine:
                                         quantize_fn=quantize_qtensor)
                        if policy.weight_fmt else params)
         kv = policy.kv_fmt
-        self._prefill = jax.jit(
-            lambda p, b: prefill(cfg, p, b, max_len=max_len, kv_fmt=kv))
-        self._decode = jax.jit(
-            lambda p, t, c: decode_step(cfg, p, t, c, kv_fmt=kv))
+        self._prefill = cached_program(
+            ("serve_prefill", cfg, kv, max_len),
+            lambda: jax.jit(
+                lambda p, b: prefill(cfg, p, b, max_len=max_len, kv_fmt=kv)))
+        self._decode = cached_program(
+            ("serve_decode", cfg, kv),
+            lambda: jax.jit(
+                lambda p, t, c: decode_step(cfg, p, t, c, kv_fmt=kv)))
         # temperature/stop are traced PER-SLOT (B,) vectors (greedy-ness is
         # the only sampling branch), so one batch serves mixed per-request
         # temperatures and stop ids without recompiling — only a new scan
         # length does
-        self._chunk = jax.jit(
-            functools.partial(self._chunk_fn, cfg=cfg, kv_fmt=kv),
-            static_argnames=("n_steps", "greedy"))
+        self._chunk = cached_program(
+            ("serve_chunk", cfg, kv),
+            lambda: jax.jit(
+                functools.partial(self._chunk_fn, cfg=cfg, kv_fmt=kv),
+                static_argnames=("n_steps", "greedy")))
         self._key = jax.random.PRNGKey(rng_seed)
 
     def _sample(self, logits, temperature: np.ndarray):

@@ -8,6 +8,23 @@ device and a ``SlotScheduler`` that, at every chunk boundary (the natural
 admission point PR 2 created), evicts finished slots and prefills queued
 requests into them while the neighbors keep decoding.
 
+Admission itself comes in two modes (DESIGN.md §9):
+
+- ``prefill_mode="whole"`` — one monolithic batch-1 prefill dispatch per
+  admission.  Simple, and it compiles one program per distinct prompt
+  length; a long prompt stalls every decoding slot for its whole length.
+- ``prefill_mode="chunked"`` — the chunked-prefill LANE: prompts are
+  split across chunk boundaries into fixed-shape (1, P_CHUNK) partial
+  prefills (``models.prefill_chunk``), at most one lane chunk advancing
+  between decode chunks.  Admission stalls are bounded by P_CHUNK, and
+  the fixed shape means ONE compiled program for every prompt length —
+  no mid-traffic retraces.  Slots move PREFILLING -> DECODING; mid-lane
+  slots ride the decode batch write-masked (``live``).
+
+WHICH queued request a free slot admits is a pluggable
+``AdmissionPolicy`` (FIFO, shortest-prompt-first, TTFT-deadline
+least-slack) behind ``SlotScheduler.next_admission``.
+
 The whole design leans on the per-slot position plumbing: ``cache["pos"]``
 is a (B,) vector, each slot ropes/writes/attends at its own offset, and
 ``prefill_into_slot`` scatters a batch-1 prefill into one slot of the live
@@ -15,20 +32,21 @@ cache. Per-request determinism is preserved exactly — a request served
 through the continuous engine emits the SAME greedy tokens as serving it
 alone through ``ServeEngine(loop="host")``, and sampled requests follow
 the per-request seed's split chain — which is what makes the whole
-scheduler testable against a bit-equality oracle.
-
-Caveat: MoE routing couples batch rows through expert capacity (arrival
-order + cap depend on the whole batch), so the bit-equality guarantee
-holds for the dense/ssm/hybrid/audio families, not ``family="moe"``.
+scheduler testable against a bit-equality oracle.  Since the decode path
+routes MoE through per-slot expert capacity (``moe_ffn_decode``), the
+guarantee covers ``family="moe"`` too — under WHOLE-prompt admission.
+MoE prefill routes with chunk-local expert capacity, so the one
+combination outside the bitwise contract is ``family="moe"`` +
+``prefill_mode="chunked"`` (allowed — padding is masked out of routing,
+the serving behavior is sane — but logged at engine init; DESIGN.md §9).
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import functools
 import logging
 import time
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,10 +54,10 @@ import numpy as np
 
 from repro.core.qtensor import QuantPolicy, direct_cast_tree
 from repro.kernels.ops import quantize_qtensor
-from repro.models import (decode_loop, init_cache, prefill_into_slot,
-                          reset_slot)
+from repro.models import (decode_loop, init_cache, init_lane, prefill_chunk,
+                          prefill_into_slot, reset_slot)
 from repro.models.common import ModelConfig
-from .engine import mask_chunk_emissions
+from .engine import cached_program, mask_chunk_emissions
 
 logger = logging.getLogger("repro.serving.scheduler")
 
@@ -77,41 +95,135 @@ class RequestResult:
         return self.n_generated / max(self.decode_seconds, 1e-9)
 
 
-class SlotScheduler:
-    """FIFO queue + free-slot bookkeeping (admission policy lives here).
+# ---------------------------------------------------------------------------
+# admission policies: WHICH arrived request does a free slot take?
+# ---------------------------------------------------------------------------
 
-    Deliberately dumb-but-observable: first-come-first-served admission
-    at chunk boundaries. Smarter policies (shortest-prompt-first,
-    priority lanes) only need to override ``next_admission``.
+class AdmissionPolicy:
+    """Picks the next request to admit from the waiting queue.
+
+    ``select`` returns an INDEX into ``queue`` (only requests whose
+    ``arrival_time`` has passed are eligible) or None to admit nothing.
+    The scheduler owns slot bookkeeping; policies only rank the queue —
+    which is all shortest-prompt-first / deadline scheduling needs.
     """
 
-    def __init__(self, n_slots: int):
+    name = "fifo"
+
+    def select(self, queue: Sequence[Request], now: float) -> Optional[int]:
+        raise NotImplementedError
+
+
+class FifoPolicy(AdmissionPolicy):
+    """First-come-first-served (PR-3 behavior, the baseline)."""
+
+    name = "fifo"
+
+    def select(self, queue, now):
+        for i, r in enumerate(queue):
+            if r.arrival_time <= now:
+                return i
+        return None
+
+
+class ShortestPromptFirst(AdmissionPolicy):
+    """Admit the arrived request with the SHORTEST prompt (ties: FIFO).
+
+    Long-prompt traffic: prefill cost scales with prompt length, so
+    short requests stuck behind a long one pay someone else's admission
+    stall.  Classic SJF — minimizes mean wait, at the cost of possible
+    long-prompt starvation under sustained short-prompt pressure.
+    """
+
+    name = "spf"
+
+    def select(self, queue, now):
+        arrived = [(len(r.tokens), i) for i, r in enumerate(queue)
+                   if r.arrival_time <= now]
+        return min(arrived)[1] if arrived else None
+
+
+class TtftDeadline(AdmissionPolicy):
+    """Least-slack-first against a TTFT deadline.
+
+    Every request implicitly owes a first token by ``arrival_time +
+    deadline_s``; slack = deadline - now - estimated own prefill time
+    (``prefill_s_per_tok * prompt_len``).  Admitting the minimum-slack
+    request spends spare time where it exists instead of FIFO's
+    arrival-order head-of-line blocking: an old long prompt and a fresh
+    short one are ranked by who is closest to blowing their deadline.
+    """
+
+    name = "ttft-deadline"
+
+    def __init__(self, deadline_s: float = 0.25,
+                 prefill_s_per_tok: float = 0.0):
+        self.deadline_s = deadline_s
+        self.prefill_s_per_tok = prefill_s_per_tok
+
+    def select(self, queue, now):
+        arrived = [(r.arrival_time + self.deadline_s - now
+                    - len(r.tokens) * self.prefill_s_per_tok, i)
+                   for i, r in enumerate(queue) if r.arrival_time <= now]
+        return min(arrived)[1] if arrived else None
+
+
+# ---------------------------------------------------------------------------
+# slot bookkeeping
+# ---------------------------------------------------------------------------
+
+PREFILLING = "PREFILLING"
+DECODING = "DECODING"
+
+
+class SlotScheduler:
+    """Queue + free-slot bookkeeping behind a pluggable admission policy.
+
+    ``next_admission`` pairs a free slot with whichever arrived request
+    the policy ranks first.  Slots carry a phase tag — PREFILLING while
+    the chunked lane is still feeding their prompt, DECODING once their
+    first token exists — so observers (and the engine's decode loop) can
+    tell a mid-prefill slot from a live one.
+    """
+
+    def __init__(self, n_slots: int, policy: Optional[AdmissionPolicy] = None):
         self.n_slots = n_slots
-        self.queue: Deque[Request] = collections.deque()
+        self.policy = policy or FifoPolicy()
+        self.queue: List[Request] = []
         self.free: List[int] = list(range(n_slots))
         self.active: Dict[int, Request] = {}
+        self.phase: Dict[int, str] = {}
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
     def next_admission(self, now: float) -> Optional[Tuple[int, Request]]:
-        """Pop (slot, request) if a slot is free and a request has arrived."""
+        """Pop (slot, request) if a slot is free and the policy picks one."""
         if not self.free or not self.queue:
             return None
-        if self.queue[0].arrival_time > now:
+        idx = self.policy.select(self.queue, now)
+        if idx is None:
             return None
         slot = self.free.pop(0)
-        req = self.queue.popleft()
+        req = self.queue.pop(idx)
         self.active[slot] = req
+        self.phase[slot] = DECODING
         return slot, req
+
+    def mark_prefilling(self, slot: int) -> None:
+        self.phase[slot] = PREFILLING
+
+    def mark_decoding(self, slot: int) -> None:
+        self.phase[slot] = DECODING
 
     def release(self, slot: int) -> Request:
         req = self.active.pop(slot)
+        self.phase.pop(slot, None)
         self.free.append(slot)
         return req
 
     def next_arrival(self) -> Optional[float]:
-        return self.queue[0].arrival_time if self.queue else None
+        return min((r.arrival_time for r in self.queue), default=None)
 
     @property
     def has_work(self) -> bool:
@@ -129,15 +241,23 @@ class ContinuousEngine:
     fixed engine's done rows), so throughput is bounded by slot
     occupancy, not by the slowest request in an arbitrary batch.
 
-    Compile caching: one decode program per chunk length, one prefill
-    program per distinct prompt length (prompts are NOT padded — padding
-    would change prefill numerics and break the solo-oracle guarantee).
-    Serve traffic with bucketed prompt lengths to bound compiles.
+    ``prefill_mode="whole"`` admits with one monolithic batch-1 prefill
+    (one program per distinct prompt length — bucket lengths, or pay a
+    compile per novel length mid-traffic).  ``prefill_mode="chunked"``
+    splits prompts into fixed-shape (1, ``p_chunk``) lane chunks
+    interleaved with decode chunks: admission stalls are bounded by
+    ``p_chunk`` and ONE program serves every prompt length.  Both modes
+    emit bit-identical greedy tokens to solo host-loop serving (the
+    "whole" path doubles as the equality oracle for "chunked") — except
+    ``family="moe"`` under chunked admission, whose prefill routing is
+    chunk-local (warned at init; use "whole" when the oracle matters).
     """
 
     def __init__(self, cfg: ModelConfig, params, policy: QuantPolicy,
                  n_slots: int = 4, max_len: int = 2048, chunk: int = 16,
-                 warn_compile: bool = True):
+                 warn_compile: bool = True, prefill_mode: str = "whole",
+                 p_chunk: int = 32,
+                 admission_policy: Optional[AdmissionPolicy] = None):
         self.cfg = cfg
         self.policy = policy
         self.n_slots = n_slots
@@ -148,12 +268,55 @@ class ContinuousEngine:
                        if policy.weight_fmt else params)
         kv = policy.kv_fmt
         self._kv = kv
-        self._prefill = jax.jit(functools.partial(
-            self._admit_fn, cfg=cfg, kv_fmt=kv, max_len=max_len))
-        self._reset = jax.jit(functools.partial(reset_slot, cfg))
-        self._chunk_jit = jax.jit(
-            functools.partial(self._chunk_fn, cfg=cfg, kv_fmt=kv),
-            static_argnames=("n_steps", "greedy"))
+        self.admission_policy = admission_policy
+        assert prefill_mode in ("whole", "chunked"), prefill_mode
+        self.prefill_mode = prefill_mode
+        self._prefill = cached_program(
+            ("admit", cfg, kv, max_len),
+            lambda: jax.jit(functools.partial(
+                self._admit_fn, cfg=cfg, kv_fmt=kv, max_len=max_len)))
+        self._reset = cached_program(
+            ("reset", cfg),
+            lambda: jax.jit(functools.partial(reset_slot, cfg)))
+        self._chunk_jit = cached_program(
+            ("cont_chunk", cfg, kv),
+            lambda: jax.jit(
+                functools.partial(self._chunk_fn, cfg=cfg, kv_fmt=kv),
+                static_argnames=("n_steps", "greedy")))
+        if prefill_mode == "chunked":
+            if cfg.family not in ("dense", "moe", "ssm", "hybrid"):
+                raise ValueError(f"chunked prefill does not serve "
+                                 f"family={cfg.family!r}")
+            if cfg.sliding_window and p_chunk > cfg.sliding_window:
+                # one lane chunk must hit distinct ring rows
+                raise ValueError(f"p_chunk ({p_chunk}) must be <= "
+                                 f"sliding_window ({cfg.sliding_window})")
+            if cfg.family in ("ssm", "hybrid") and p_chunk % cfg.ssm_chunk:
+                # lane scan chunking must align with the whole-prompt
+                # oracle's associative-scan grouping for bit-equality
+                raise ValueError(f"p_chunk ({p_chunk}) must be a multiple "
+                                 f"of ssm_chunk ({cfg.ssm_chunk})")
+            if cfg.family == "moe":
+                logger.warning(
+                    "family='moe' + prefill_mode='chunked': expert "
+                    "capacity is chunk-local, so outputs are NOT "
+                    "bit-identical to whole-prompt admission (use "
+                    "prefill_mode='whole' when the oracle matters)")
+            self.p_chunk = p_chunk
+            self.lane = init_lane(cfg, max_len, p_chunk)
+            # natural-order scratch rows: ABSOLUTE prompt offsets index
+            # the lane, so prompts longer than this must fail loudly at
+            # submit (SWA rings wrap the LIVE cache, but a clamped lane
+            # write would silently corrupt rows inside the window)
+            self._lane_rows = -(-max_len // p_chunk) * p_chunk
+            self._lane_fn = cached_program(
+                ("lane", cfg, kv, p_chunk),
+                lambda: jax.jit(functools.partial(
+                    self._lane_chunk_fn, cfg=cfg, kv_fmt=kv),
+                    static_argnames=("with_head",)))
+            self._finish = cached_program(
+                ("finish", cfg), lambda: jax.jit(self._finish_prefill_fn))
+        self._pf: Optional[Dict[str, Any]] = None   # in-flight lane cursor
         self.cache = init_cache(cfg, n_slots, max_len, kv)
         self._seen_prompt_lens: set = set()
         self._warn_compile = warn_compile
@@ -161,6 +324,7 @@ class ContinuousEngine:
         self._tok = np.zeros((n_slots,), np.int32)
         self._keys = np.zeros((n_slots, 2), np.uint32)
         self._done = np.ones((n_slots,), bool)      # all parked
+        self._live = np.zeros((n_slots,), bool)     # admitted AND decoding
         self._n_gen = np.zeros((n_slots,), np.int32)
         self._max_new = np.zeros((n_slots,), np.int32)
         self._temp = np.zeros((n_slots,), np.float32)
@@ -169,27 +333,67 @@ class ContinuousEngine:
     # -- jitted bodies ------------------------------------------------------
 
     @staticmethod
-    def _admit_fn(params, batch, cache, slot, key, temperature,
-                  *, cfg, kv_fmt, max_len):
-        """Prefill one request into ``slot`` and sample its first token.
+    def _first_token(logits, key, temperature):
+        """Sample a request's FIRST token off its prefill logits (1, V).
 
-        One dispatch per admission: batch-1 prefill, slot scatter, and the
-        first-token sample (argmax, or categorical on the request's OWN
-        key chain — the same ``split`` sequence the solo engine walks).
+        Argmax, or categorical on the request's OWN key chain — the same
+        ``split`` sequence the solo engine walks.  Shared by monolithic
+        admission and the lane's final chunk, so chunked-vs-whole
+        first-token equality holds by construction, not by copy-paste.
         """
-        logits, new_cache = prefill_into_slot(cfg, params, batch, cache,
-                                              slot, max_len, kv_fmt)
         greedy = jnp.argmax(logits, axis=-1)
         key2, sub = jax.random.split(key)
         safe = jnp.where(temperature > 0, temperature, 1.0)
         sampled = jax.random.categorical(sub, logits / safe, axis=-1)
         tok0 = jnp.where(temperature > 0, sampled[0], greedy[0])
         key_out = jnp.where(temperature > 0, key2, key)
-        return tok0.astype(jnp.int32), key_out, new_cache
+        return tok0.astype(jnp.int32), key_out
+
+    @staticmethod
+    def _admit_fn(params, batch, cache, slot, key, temperature,
+                  *, cfg, kv_fmt, max_len):
+        """Prefill one request into ``slot`` and sample its first token.
+
+        One dispatch per admission: batch-1 prefill, slot scatter, and
+        the first-token sample (``_first_token``).
+        """
+        logits, new_cache = prefill_into_slot(cfg, params, batch, cache,
+                                              slot, max_len, kv_fmt)
+        tok0, key_out = ContinuousEngine._first_token(logits, key,
+                                                      temperature)
+        return tok0, key_out, new_cache
+
+    @staticmethod
+    def _lane_chunk_fn(params, tokens, cache, lane, slot, offset, n_valid,
+                       *, cfg, kv_fmt, with_head: bool):
+        """One fixed-shape lane advance (see ``models.prefill_chunk``).
+
+        ``with_head`` (static) is True only for a prompt's FINAL chunk —
+        intermediate chunks skip the vocab-head matmul their discarded
+        return would have paid for (two compiled programs total, both
+        prompt-length-independent).
+        """
+        return prefill_chunk(cfg, params, tokens, cache, slot, offset,
+                             n_valid, lane, kv_fmt, with_head=with_head)
+
+    @staticmethod
+    def _finish_prefill_fn(logits, key, temperature, cache, slot, t):
+        """Final-chunk tail: sample the first token and un-park the slot.
+
+        The lane's final logits ARE the whole-prompt prefill logits, and
+        the sample is the shared ``_first_token``, so the first token
+        (greedy or the seed chain's categorical) matches the monolithic
+        path exactly.  ``pos[slot] <- t`` arms the slot for decode.
+        """
+        tok0, key_out = ContinuousEngine._first_token(logits, key,
+                                                      temperature)
+        pos = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.asarray(t, jnp.int32).reshape(1), (slot,))
+        return tok0, key_out, dict(cache, pos=pos)
 
     @staticmethod
     def _chunk_fn(params, tok, cache, keys, done, n_gen, max_new,
-                  temperature, stop, *, cfg, kv_fmt, n_steps: int,
+                  temperature, stop, live, *, cfg, kv_fmt, n_steps: int,
                   greedy: bool):
         """One dispatch = ``n_steps`` ragged decode steps, fully on device.
 
@@ -204,6 +408,9 @@ class ContinuousEngine:
         (static: no sampled slot is live this chunk) skips the per-step
         vmapped split+categorical — on CPU the per-slot threefry chain
         costs ~2x decode itself, and greedy slots never read their keys.
+        ``live`` (B,) bool freezes not-live slots' cache state (position,
+        K/V writes, SSM integration): mid-chunked-prefill and parked
+        slots step through the batch without clobbering lane-owned rows.
         """
         def split_fn(ks):
             if greedy:          # keys untouched; sampled slots don't exist
@@ -222,12 +429,23 @@ class ContinuousEngine:
 
         toks, tok, cache, keys = decode_loop(
             cfg, params, tok, cache, n_steps, kv_fmt, sample, keys,
-            split_fn=split_fn)
+            split_fn=split_fn, live=live)
         emitted, n_gen, done = mask_chunk_emissions(toks, done, n_gen,
                                                     stop, max_new)
         return emitted, tok, cache, keys, done, n_gen
 
     # -- host loop ----------------------------------------------------------
+
+    def _arm_slot(self, slot: int, req: Request, tok0, key) -> None:
+        """Host-side slot state for a freshly admitted, decoding request."""
+        self._tok[slot] = int(tok0)
+        self._keys[slot] = np.asarray(key, np.uint32)
+        self._done[slot] = False
+        self._live[slot] = True
+        self._n_gen[slot] = 0
+        self._max_new[slot] = req.max_new
+        self._temp[slot] = req.temperature
+        self._stop[slot] = -1 if req.stop_token is None else req.stop_token
 
     def _admit(self, slot: int, req: Request, now: float,
                clock) -> Dict[str, Any]:
@@ -241,14 +459,7 @@ class ContinuousEngine:
         tok0, key, self.cache = self._prefill(
             self.params, batch, self.cache, jnp.int32(slot), key,
             jnp.float32(req.temperature))
-        tok0 = int(tok0)
-        self._tok[slot] = tok0
-        self._keys[slot] = np.asarray(key, np.uint32)
-        self._done[slot] = False
-        self._n_gen[slot] = 0
-        self._max_new[slot] = req.max_new
-        self._temp[slot] = req.temperature
-        self._stop[slot] = -1 if req.stop_token is None else req.stop_token
+        self._arm_slot(slot, req, tok0, key)
         admit_done = clock()
         logger.info("admit uid=%d slot=%d prompt=%d max_new=%d "
                     "queue_delay=%.3fs", req.uid, slot, t, req.max_new,
@@ -256,18 +467,73 @@ class ContinuousEngine:
         return {"admit_time": now, "first_token_time": admit_done,
                 "out": [], "prev_n_gen": 0}
 
+    def _advance_lane(self, sched: SlotScheduler, state: Dict[int, Any],
+                      clock) -> None:
+        """Chunked admission: start/advance the ONE in-flight prefill.
+
+        Each call moves the lane by at most ``p_chunk`` prompt tokens (one
+        fixed-shape dispatch), so the stall a decode chunk ever waits
+        behind is bounded by one lane chunk — not a whole prompt.  On the
+        final chunk the slot is armed exactly as ``_admit`` would arm it.
+        """
+        now = clock()
+        if self._pf is None:
+            adm = sched.next_admission(now)
+            if adm is None:
+                return
+            slot, req = adm
+            sched.mark_prefilling(slot)
+            # the slot rides the decode batch write-masked until armed
+            self._live[slot] = False
+            self._done[slot] = True
+            self._temp[slot] = 0.0
+            self._stop[slot] = -1
+            self._pf = {"slot": slot, "req": req, "offset": 0,
+                        "admit_time": now}
+            logger.info("prefill-start uid=%d slot=%d prompt=%d chunks=%d "
+                        "queue_delay=%.3fs", req.uid, slot, len(req.tokens),
+                        -(-len(req.tokens) // self.p_chunk),
+                        now - req.arrival_time)
+        pf = self._pf
+        slot, req, off = pf["slot"], pf["req"], pf["offset"]
+        t = len(req.tokens)
+        n_valid = min(self.p_chunk, t - off)
+        final = off + n_valid >= t
+        chunk_toks = np.zeros((1, self.p_chunk), np.int32)
+        chunk_toks[0, :n_valid] = req.tokens[off:off + n_valid]
+        logits, self.cache, self.lane = self._lane_fn(
+            self.params, chunk_toks, self.cache, self.lane,
+            jnp.int32(slot), jnp.int32(off), jnp.int32(n_valid),
+            with_head=final)
+        pf["offset"] = off + n_valid
+        if not final:
+            return
+        tok0, key, self.cache = self._finish(
+            logits, jax.random.PRNGKey(req.seed),
+            jnp.float32(req.temperature), self.cache, jnp.int32(slot), t)
+        self._arm_slot(slot, req, tok0, key)
+        sched.mark_decoding(slot)
+        state[slot] = {"admit_time": pf["admit_time"],
+                       "first_token_time": clock(), "out": [],
+                       "prev_n_gen": 0}
+        logger.info("prefill-done uid=%d slot=%d prompt=%d ttft=%.3fs",
+                    req.uid, slot, t,
+                    state[slot]["first_token_time"] - req.arrival_time)
+        self._pf = None
+
     def serve(self, requests: List[Request],
               progress_cb=None) -> List[RequestResult]:
         """Drain ``requests`` (honoring arrival times) through the slots.
 
         Returns one ``RequestResult`` per request (same order as
-        completion). The loop: admit into every free slot whose request
-        has arrived -> run one decode chunk over ALL slots -> harvest
-        emissions per slot -> evict finished slots (park pos, zero SSM
-        state) -> repeat. Idle gaps (queue non-empty but nothing arrived)
-        sleep to the next arrival instead of spinning.
+        completion). The loop: admit into free slots whose requests have
+        arrived (whole prefills, or ONE lane chunk in chunked mode) ->
+        run one decode chunk over ALL slots -> harvest emissions per slot
+        -> evict finished slots (park pos, zero SSM state) -> repeat.
+        Idle gaps (queue non-empty but nothing arrived) sleep to the next
+        arrival instead of spinning.
         """
-        sched = SlotScheduler(self.n_slots)
+        sched = SlotScheduler(self.n_slots, policy=self.admission_policy)
         for r in requests:
             # reject overflow up front: a full-cache slot would clamp-write
             # its last row and return garbage with no error (SWA caches are
@@ -278,31 +544,61 @@ class ContinuousEngine:
                     f"request uid={r.uid}: prompt ({len(r.tokens)}) + "
                     f"max_new ({r.max_new}) exceeds max_len "
                     f"({self.max_len})")
+            # the lane scratch is indexed by ABSOLUTE offset (bit-equality
+            # needs natural order), so even ring-cached prompts must fit
+            # it — a clamped lane write would corrupt silently
+            if self.prefill_mode == "chunked" and \
+                    len(r.tokens) > self._lane_rows:
+                raise ValueError(
+                    f"request uid={r.uid}: prompt ({len(r.tokens)}) "
+                    f"exceeds the prefill-lane scratch "
+                    f"({self._lane_rows} rows) — raise max_len or use "
+                    f"prefill_mode='whole'")
             sched.submit(r)
+        # re-park everything at entry: a normal drain leaves exactly this
+        # state, but an ABORTED previous serve (exception mid-prefill,
+        # KeyboardInterrupt) would otherwise leak its lane cursor and
+        # live/done flags into the fresh scheduler — an orphaned slot the
+        # new free-list also hands out. Admission overwrites parked
+        # slots' cache wholesale, so flags are the only state to clear.
+        self._pf = None
+        self._live[:] = False
+        self._done[:] = True
         t0 = time.time()
         clock = lambda: time.time() - t0   # noqa: E731  (virtual now)
         state: Dict[int, Dict[str, Any]] = {}
         results: List[RequestResult] = []
+        chunked = self.prefill_mode == "chunked"
 
         while sched.has_work:
             now = clock()
-            while True:
-                adm = sched.next_admission(now)
-                if adm is None:
-                    break
-                slot, req = adm
-                state[slot] = self._admit(slot, req, now, clock)
-            if not sched.active:
+            if chunked:
+                self._advance_lane(sched, state, clock)
+            else:
+                while True:
+                    adm = sched.next_admission(now)
+                    if adm is None:
+                        break
+                    slot, req = adm
+                    state[slot] = self._admit(slot, req, now, clock)
+            if not self._live.any():
+                if chunked and self._pf is not None:
+                    continue            # lane keeps grinding, no decoders
                 nxt = sched.next_arrival()
                 assert nxt is not None
                 time.sleep(max(nxt - clock(), 0.0))
                 continue
 
+            # whole mode never has a mid-prefill rider, so it skips the
+            # live gating entirely (live=None lowers to the cheaper PR-3
+            # decode path; parked-slot garbage writes are harmless there
+            # because admission overwrites the whole slot)
             emitted, tok, self.cache, keys, done, n_gen = self._chunk_jit(
                 self.params, jnp.asarray(self._tok), self.cache,
                 jnp.asarray(self._keys), jnp.asarray(self._done),
                 jnp.asarray(self._n_gen), jnp.asarray(self._max_new),
                 jnp.asarray(self._temp), jnp.asarray(self._stop),
+                jnp.asarray(self._live) if chunked else None,
                 n_steps=self.chunk,
                 greedy=bool((self._temp == 0.0).all()))
             # one host transfer per chunk; copies (not views) because the
@@ -316,13 +612,16 @@ class ContinuousEngine:
             now = clock()
 
             for slot in list(sched.active):
-                st = state[slot]
+                st = state.get(slot)
+                if st is None:          # mid-prefill: nothing to harvest
+                    continue
                 delta = int(self._n_gen[slot]) - st["prev_n_gen"]
                 st["out"].extend(emitted[slot, :delta].tolist())
                 st["prev_n_gen"] = int(self._n_gen[slot])
                 if self._done[slot]:
                     req = sched.release(slot)
                     self.cache = self._reset(self.cache, jnp.int32(slot))
+                    self._live[slot] = False
                     self._temp[slot] = 0.0   # parked slots don't hold the
                     self._stop[slot] = -1    # chunk in sampled mode
                     results.append(RequestResult(

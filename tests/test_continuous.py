@@ -41,6 +41,8 @@ def _solo(cfg, params, policy, req, seed=0):
     ("llama3_8b", "nxfp4"),       # NxFP-packed KV + weights
     ("hymba_1_5b", "nxfp4"),      # hybrid: SWA ring + SSM state reset
     ("falcon_mamba_7b", None),    # attention-free: pure recurrent slots
+    ("qwen2_moe_a2_7b", "nxfp4"), # MoE: per-slot expert capacity decouples
+                                  # rows (un-skipped — moe_ffn_decode)
 ])
 def test_continuous_matches_solo_host(arch, fmt):
     """Greedy bit-equality through staggered admissions and slot reuse:
