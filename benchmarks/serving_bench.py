@@ -27,7 +27,10 @@ NXFP_BENCH_QUICK=1 shrinks shapes for the CI smoke row.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -380,11 +383,151 @@ def run_admission_policies(csv: Csv):
                 unit="us_per_tok")
 
 
+def run_p_chunk_auto(csv: Csv):
+    """The p_chunk="auto" warmup sweep, reported as rows.
+
+    One row per candidate (measured lane-chunk dispatch time) plus the
+    decode-chunk stall unit and the chosen value — the backend-specific
+    tradeoff ROADMAP wants re-measured on TPU, captured per run.
+    """
+    cfg = SERVE_CFG
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    policy = QuantPolicy(weight_fmt="nxfp4", kv_fmt="nxfp4")
+    cands = (8, 16) if _quick() else (8, 16, 32, 64)
+    eng = ContinuousEngine(cfg, params, policy, n_slots=4, max_len=256,
+                           chunk=16, prefill_mode="chunked",
+                           p_chunk="auto", p_chunk_candidates=cands)
+    for p, s in eng.p_chunk_sweep.items():
+        derived = (f"lane_tok_s={p / s:.0f}"
+                   f"{' chosen=True' if p == eng.p_chunk else ''}")
+        csv.add(f"serving/p_chunk_auto/{p}", s * 1e6, derived,
+                unit="us_per_chunk")
+
+
+# ---------------------------------------------------------------------------
+# sharded continuous serving (ISSUE-5): slot axis over a 'data' mesh
+# ---------------------------------------------------------------------------
+
+_SHARDED_SCRIPT = r"""
+import json, sys, time
+import numpy as np
+import jax
+from repro.core.qtensor import QuantPolicy
+from repro.models import init_params
+from repro.models.common import ModelConfig
+from repro.serving import ContinuousEngine, Request
+from repro.serving.sharded import ShardedContinuousEngine
+from repro.launch.mesh import make_serving_mesh
+
+quick, n_slots, chunk, p_chunk = json.loads(sys.argv[1])
+cfg = ModelConfig(name="serve-lm", family="dense", n_layers=1, d_model=64,
+                  n_heads=1, n_kv_heads=1, d_ff=256, vocab=256, remat=False)
+n_req = 12 if quick else 32
+max_new_choices = (8, 16, 48) if quick else (16, 32, 64, 128)
+prompt_lens, rate = (8, 16), 200.0
+max_len = max(prompt_lens) + max(max_new_choices) + 8
+rng = np.random.default_rng(0)
+reqs, t = [], 0.0
+for i in range(n_req):
+    t += float(rng.exponential(1.0 / rate))
+    tl = int(rng.choice(prompt_lens))
+    reqs.append(dict(uid=i,
+                     tokens=rng.integers(0, cfg.vocab, (tl,))
+                     .astype(np.int32),
+                     max_new=int(rng.choice(max_new_choices)),
+                     arrival_time=t))
+params = init_params(cfg, jax.random.PRNGKey(0))
+policy = QuantPolicy(weight_fmt="nxfp4", kv_fmt="nxfp4")
+
+def serve(shards):
+    kw = dict(n_slots=n_slots, max_len=max_len, chunk=chunk,
+              prefill_mode="chunked", p_chunk=p_chunk)
+    if shards == 1:
+        eng = ContinuousEngine(cfg, params, policy, **kw)
+    else:
+        eng = ShardedContinuousEngine(cfg, params, policy,
+                                      make_serving_mesh(shards), **kw)
+    # warm the fixed-shape programs (decode chunk + both lane variants)
+    eng.serve([Request(uid=-1, tokens=np.zeros((p_chunk + 8,), np.int32),
+                       max_new=1)])
+    t0 = time.time()
+    results = eng.serve([Request(**r) for r in reqs])
+    wall = time.time() - t0
+    return results, wall
+
+ref = None
+for shards in (1, 2, 4):
+    results, wall = serve(shards)
+    toks = {r.uid: r.tokens for r in results}
+    if ref is None:
+        ref = toks
+    else:       # the sharded mesh must not perturb a single token
+        for uid, want in ref.items():
+            if not np.array_equal(toks[uid], want):
+                raise AssertionError(
+                    f"sharded ({shards}) diverged from unsharded "
+                    f"(uid={uid})")
+    useful = sum(r.n_generated for r in results)
+    ttft = [r.ttft for r in results]
+    print("ROW " + json.dumps({
+        "shards": shards, "tok_s": useful / wall,
+        "p50_ttft_ms": float(np.percentile(ttft, 50)) * 1e3,
+        "p99_ttft_ms": float(np.percentile(ttft, 99)) * 1e3,
+        "n_req": n_req, "slots": n_slots}))
+print("SHARDED_BENCH_OK")
+"""
+
+
+def run_sharded(csv: Csv):
+    """Slot-sharded vs unsharded continuous serving, 1/2/4 shards.
+
+    Runs in a subprocess with 4 forced host devices (this process must
+    keep one device).  The script re-serves the SAME Poisson mixed-length
+    workload at each shard count and raises if any sharded token stream
+    diverges from the unsharded engine — the sharded bitwise oracle rides
+    the bench exactly like the chunked-prefill one does.
+
+    CPU caveat (same spirit as DESIGN.md §9): the forced host devices
+    serialize onto one machine, so shard counts cannot show wall-clock
+    SCALING here — these rows price the shard_map dispatch overhead and
+    pin the oracle; the S-way throughput claim is a TPU measurement
+    (DESIGN.md §10).
+    """
+    quick = _quick()
+    n_slots, chunk, p_chunk = 4, (8 if quick else 16), 8
+    # APPEND the forced-device flag: the subprocess rows must run under
+    # the same compiler flags as every other row in the summary
+    flags = (os.environ.get("XLA_FLAGS", "")
+             + " --xla_force_host_platform_device_count=4").strip()
+    env = {**os.environ, "XLA_FLAGS": flags, "PYTHONPATH": "src"}
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT,
+         json.dumps([quick, n_slots, chunk, p_chunk])],
+        env=env, capture_output=True, text=True, timeout=1200,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if "SHARDED_BENCH_OK" not in out.stdout:
+        raise AssertionError(f"sharded bench subprocess failed:\n"
+                             f"{out.stdout}\n{out.stderr}")
+    for line in out.stdout.splitlines():
+        if not line.startswith("ROW "):
+            continue
+        row = json.loads(line[4:])
+        derived = (f"tok_s={row['tok_s']:.0f} "
+                   f"p50_ttft_ms={row['p50_ttft_ms']:.1f} "
+                   f"p99_ttft_ms={row['p99_ttft_ms']:.1f} "
+                   f"n_req={row['n_req']} slots={row['slots']} "
+                   f"p_chunk={p_chunk} bit_identical=True")
+        csv.add(f"serving/sharded/{row['shards']}shard",
+                1e6 / row["tok_s"], derived, unit="us_per_tok")
+
+
 def run(csv: Csv):
     run_loops(csv)
     run_continuous(csv)
     run_longprompt(csv)
     run_admission_policies(csv)
+    run_p_chunk_auto(csv)
+    run_sharded(csv)
 
 
 def main():

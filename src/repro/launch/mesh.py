@@ -18,3 +18,23 @@ def make_mesh(shape, axes):
 def make_test_mesh(data: int = 2, model: int = 4):
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(n_shards: int):
+    """1-D ('data',) mesh over the first ``n_shards`` devices.
+
+    The slot-sharded continuous engine's mesh (DESIGN.md §10): weights
+    replicate, the slot axis shards.  Built from a device PREFIX (not
+    ``jax.make_mesh``, which wants them all) so a 4-device container can
+    host a 2-shard engine and a 4-shard engine in the same process —
+    what the sharded serving bench sweeps.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = jax.devices()
+    if len(devices) < n_shards:
+        raise ValueError(f"need {n_shards} devices for {n_shards} shards, "
+                         f"have {len(devices)} (set "
+                         f"--xla_force_host_platform_device_count on CPU)")
+    return Mesh(np.array(devices[:n_shards]), ("data",))

@@ -16,8 +16,9 @@ import jax.numpy as jnp
 
 from .attention import (attend_chunked, cross_attention, gqa_project,
                         memory_kv, self_attention, self_attention_resume)
-from .common import (ModelConfig, apply_rope, dense, init_attn, init_mlp,
-                     ninit, rmsnorm, rope_freqs, split_keys, swiglu)
+from .common import (ModelConfig, apply_rope, dense, gated_update_slice,
+                     init_attn, init_mlp, ninit, rmsnorm, rope_freqs,
+                     split_keys, swiglu)
 from .kvcache import attend_decode, write_prefill_at, write_token
 from .moe import init_moe, moe_ffn, moe_ffn_decode
 from .ssm import init_mamba, mamba_block, mamba_step
@@ -115,15 +116,19 @@ def layer_forward(cfg: ModelConfig, p: Params, x, positions, kind: str,
 # chunked-prefill body (one fixed-shape chunk of the in-flight prompt)
 # ---------------------------------------------------------------------------
 
-def _slot_put(buf, val, slot):
-    """Write one slot's row of a (B, ...) state buffer."""
+def _slot_put(buf, val, slot, apply=None):
+    """Write one slot's row of a (B, ...) state buffer.
+
+    ``apply`` (traced bool) value-gates the write — see
+    ``common.gated_update_slice`` (the owner-masking idiom).
+    """
     idx = (slot,) + (0,) * (buf.ndim - 1)
-    return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype), idx)
+    return gated_update_slice(buf, val.astype(buf.dtype), idx, apply)
 
 
 def layer_prefill_chunk(cfg: ModelConfig, p: Params, x, lane_l, cache_l,
                         slot, positions, offset, n_valid, kind: str,
-                        kv_fmt: Optional[str], first):
+                        kv_fmt: Optional[str], first, active=None):
     """One layer of the resumable chunked prefill. x (1, P, D).
 
     Mirrors ``layer_forward`` over a single (1, P) chunk of the prompt:
@@ -136,6 +141,11 @@ def layer_prefill_chunk(cfg: ModelConfig, p: Params, x, lane_l, cache_l,
     the whole-prompt ``h0=None`` init).  Rows past ``n_valid`` are
     fixed-shape padding: identity transitions for the SSM, causally
     masked for attention, dropped by the cache scatter.
+
+    ``active`` (traced bool, sharded no-op calls — see
+    ``lm.prefill_chunk``) gates the SSM cache-state writes; the K/V
+    scatter needs no gate because an inactive call's ``n_valid=0``
+    routes every row out of range.
 
     Returns (x, new_lane_l, new_cache_l).
     """
@@ -169,8 +179,9 @@ def layer_prefill_chunk(cfg: ModelConfig, p: Params, x, lane_l, cache_l,
         # the slot's in-cache recurrent state tracks the lane every chunk
         # (not-live slots are frozen through decode chunks, so the value
         # standing when the slot goes live is the lane's final carry)
-        new_cache.update(h=_slot_put(cache_l["h"], hf, slot),
-                         conv=_slot_put(cache_l["conv"], conv, slot))
+        new_cache.update(h=_slot_put(cache_l["h"], hf, slot, apply=active),
+                         conv=_slot_put(cache_l["conv"], conv, slot,
+                                        apply=active))
 
     if kind == "ssm":
         return x + ssm_y, new_lane, new_cache

@@ -128,6 +128,26 @@ class ModelConfig:
 # init helpers
 # ---------------------------------------------------------------------------
 
+def gated_update_slice(buf, val, idx, apply=None):
+    """``dynamic_update_slice`` whose VALUE is gated by a traced bool.
+
+    ``apply=None`` is the plain update; otherwise a not-applying call
+    writes the current contents back — so the op stays ONE in-place-able
+    row write per buffer (no full-buffer select), the same trick as
+    ``kvcache.write_token``'s live gating.  This is the single idiom
+    behind every owner-masked slot-surgery write in the slot-sharded
+    serving engine (DESIGN.md §10): all shards run the same program,
+    only the shard owning the target slot changes its slice.  One
+    definition on purpose — the in-place/no-select property is
+    load-bearing for the serving hot paths, so there must be exactly
+    one place to get it wrong.
+    """
+    if apply is not None:
+        cur = jax.lax.dynamic_slice(buf, idx, val.shape)
+        val = jnp.where(apply, val, cur)
+    return jax.lax.dynamic_update_slice(buf, val, idx)
+
+
 def ninit(key, shape, scale: float = 0.02, dtype=jnp.float32):
     return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
 

@@ -112,6 +112,14 @@ def write_prefill_at(cfg: ModelConfig, layer_cache, k, v, slot, offset,
     are routed out of range and DROPPED by the scatter, so a ragged final
     chunk never touches rows it doesn't own.  Requires P <= window for
     ring caches (distinct in-chunk rows; the engine asserts it).
+
+    ``n_valid = 0`` routes EVERY row out of range — the whole call
+    becomes a cache no-op, which is how an idle shard rides the sharded
+    engine's fused lane dispatch (DESIGN.md §10).  Under the slot-sharded
+    manual shard_map the slot axis of ``layer_cache`` is a local shard
+    slice, so this scatter stays a single-device op per shard — but its
+    Mosaic lowering on the uint8 packed rows is a first-real-TPU-run
+    validation item (DESIGN.md §10, ROADMAP).
     """
     w = cfg.sliding_window
     pch = k.shape[1]

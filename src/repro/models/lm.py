@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from .attention import memory_kv
 from .blocks import (init_layer, layer_decode, layer_forward,
                      layer_prefill_chunk)
-from .common import ModelConfig, dense, ninit, rmsnorm, split_keys
+from .common import (ModelConfig, dense, gated_update_slice, ninit, rmsnorm,
+                     split_keys)
 from .kvcache import ssm_cache_init, write_prefill
 
 Params = Dict[str, Any]
@@ -252,8 +253,8 @@ def _check_p_chunk(cfg: ModelConfig, p_chunk: int) -> None:
         p_chunk % cfg.ssm_chunk == 0, (p_chunk, cfg.ssm_chunk)
 
 
-def init_lane(cfg: ModelConfig, max_len: int, p_chunk: int
-              ) -> Dict[str, Any]:
+def init_lane(cfg: ModelConfig, max_len: int, p_chunk: int,
+              n_lanes: int = 1) -> Dict[str, Any]:
     """Allocate the chunked-prefill lane scratch (batch-1, fixed shapes).
 
     The lane holds the ONE in-flight prompt's state between chunks:
@@ -264,6 +265,11 @@ def init_lane(cfg: ModelConfig, max_len: int, p_chunk: int
     need no reset between requests: attention masks beyond-valid rows to
     exact-zero contributions and ``prefill_chunk`` zeroes the recurrent
     carry at ``offset == 0``.
+
+    ``n_lanes`` stacks independent lanes along the batch axis — the
+    slot-sharded engine allocates one PER SHARD (batch axis sharded over
+    'data'), so each shard's manual shard_map body sees the ordinary
+    batch-1 lane while S prompts prefill concurrently.
     """
     assert cfg.family in _KIND, (cfg.family, "chunked prefill serves the "
                                  "scanned-stack families")
@@ -271,17 +277,17 @@ def init_lane(cfg: ModelConfig, max_len: int, p_chunk: int
     s_p = -(-max_len // p_chunk) * p_chunk
     lane: Dict[str, Any] = {}
     if cfg.family != "ssm":
-        z = jnp.zeros((cfg.n_layers, 1, s_p, cfg.n_kv_heads, cfg.hd),
+        z = jnp.zeros((cfg.n_layers, n_lanes, s_p, cfg.n_kv_heads, cfg.hd),
                       cfg.dtype)
         lane.update(k=z, v=z)
     if cfg.family in ("ssm", "hybrid"):
-        lane.update(ssm_cache_init(cfg, cfg.n_layers, 1))
+        lane.update(ssm_cache_init(cfg, cfg.n_layers, n_lanes))
     return lane
 
 
 def prefill_chunk(cfg: ModelConfig, params: Params, tokens, cache, slot,
                   offset, n_valid, lane, kv_fmt: Optional[str],
-                  with_head: bool = True):
+                  with_head: bool = True, active=None):
     """Advance the in-flight prefill by ONE fixed-shape (1, P) chunk.
 
     ``tokens`` holds prompt positions [offset, offset + P) (tail-padded
@@ -300,6 +306,15 @@ def prefill_chunk(cfg: ModelConfig, params: Params, tokens, cache, slot,
     chunk's logits are ever read, and at real vocab sizes the head is a
     whole layer's worth of FLOPs per chunk.
 
+    ``active`` (traced bool, default live) is the sharded engine's no-op
+    form: an inactive call (a shard whose lane is idle while its
+    neighbors advance theirs inside one fused dispatch) must leave the
+    CACHE untouched — callers pass ``n_valid=0`` so the K/V scatter
+    drops every row, and ``active=False`` gates the SSM state writes
+    that have no out-of-range row to route to.  Lane scratch may take
+    garbage writes either way: the next prompt's chunks overwrite/mask
+    every row they read (see ``init_lane``).
+
     Returns (logits (1, V) — or hidden (1, D) — , new_cache, new_lane).
     """
     b, pch = tokens.shape
@@ -316,7 +331,7 @@ def prefill_chunk(cfg: ModelConfig, params: Params, tokens, cache, slot,
         lp, lane_l, cache_l = xs
         h, new_lane_l, new_cache_l = layer_prefill_chunk(
             cfg, lp, h, lane_l, cache_l, slot, positions, offset, n_valid,
-            kind, kv_fmt, first)
+            kind, kv_fmt, first, active=active)
         return h, (new_lane_l, new_cache_l)
 
     x, (new_lane, new_layers) = jax.lax.scan(
@@ -486,16 +501,19 @@ def _batch_axis(name: str) -> int:
     return 2 if name == "self_layers" else 1  # vlm self stack: (G, k-1, B,…)
 
 
-def write_cache_slot(cache: Dict[str, Any], solo: Dict[str, Any], slot):
+def write_cache_slot(cache: Dict[str, Any], solo: Dict[str, Any], slot,
+                     apply=None):
     """Merge a batch-1 cache (from a batch-1 ``prefill``) into slot ``slot``.
 
     Every leaf of ``solo`` is size 1 along the batch axis; a traced-index
     ``dynamic_update_slice`` drops it into the live cache without touching
     neighbor slots — K/V rows, ring meta, SSM state and the slot's ``pos``
-    all land atomically (one fused jit).
+    all land atomically (one fused jit).  ``apply`` (traced bool) makes
+    the whole merge a value-gated no-op (sharded owner masking — see
+    ``common.gated_update_slice``).
     """
-    new: Dict[str, Any] = {"pos": jax.lax.dynamic_update_slice(
-        cache["pos"], jnp.asarray(solo["pos"], jnp.int32), (slot,))}
+    new: Dict[str, Any] = {"pos": gated_update_slice(
+        cache["pos"], jnp.asarray(solo["pos"], jnp.int32), (slot,), apply)}
     for name, group in cache.items():
         if name == "pos":
             continue
@@ -504,8 +522,8 @@ def write_cache_slot(cache: Dict[str, Any], solo: Dict[str, Any], slot):
         def put(leaf, s_leaf):
             idx = [0] * leaf.ndim
             idx[axis] = slot
-            return jax.lax.dynamic_update_slice(
-                leaf, s_leaf.astype(leaf.dtype), tuple(idx))
+            return gated_update_slice(leaf, s_leaf.astype(leaf.dtype),
+                                      tuple(idx), apply)
 
         new[name] = jax.tree.map(put, group, solo[name])
     return new
@@ -513,32 +531,37 @@ def write_cache_slot(cache: Dict[str, Any], solo: Dict[str, Any], slot):
 
 def prefill_into_slot(cfg: ModelConfig, params: Params,
                       batch: Dict[str, Any], cache: Dict[str, Any], slot,
-                      max_len: int, kv_fmt: Optional[str]):
+                      max_len: int, kv_fmt: Optional[str], apply=None):
     """Prefill ONE request (batch-1 inputs) into slot ``slot`` of a live cache.
 
     The prompt runs through the ordinary batch-1 ``prefill`` (so its K/V
     and logits are bit-identical to serving it alone), then its cache is
     scattered into the slot. Returns (last logits (1, V), new cache).
+    ``apply`` (traced bool) gates the scatter only — the sharded engine
+    runs the prefill replicated on every shard and lets the slot's owner
+    alone commit the merge.
     """
     assert batch["tokens"].shape[0] == 1, batch["tokens"].shape
     logits, solo = prefill(cfg, params, batch, max_len, kv_fmt)
-    return logits, write_cache_slot(cache, solo, slot)
+    return logits, write_cache_slot(cache, solo, slot, apply=apply)
 
 
-def reset_slot(cfg: ModelConfig, cache: Dict[str, Any], slot):
+def reset_slot(cfg: ModelConfig, cache: Dict[str, Any], slot, apply=None):
     """Park a finished slot: ``pos[slot] -> 0``, recurrent state zeroed.
 
     K/V rows are left stale on purpose — reads are masked to ``pos`` and
     admission overwrites the whole slot — but the ring pointer must stop
     growing (an unparked drained slot would eventually clamp-write at the
     buffer edge) and SSM state integrates forward unmasked, so both reset.
+    ``apply`` (traced bool) owner-masks the park for the sharded engine.
     """
     new = dict(cache)
-    new["pos"] = jax.lax.dynamic_update_slice(
-        cache["pos"], jnp.zeros((1,), jnp.int32), (slot,))
+    new["pos"] = gated_update_slice(cache["pos"], jnp.zeros((1,), jnp.int32),
+                                    (slot,), apply)
     layers = cache.get("layers")
     if layers is not None and "h" in layers:
         from .ssm import reset_state_slot
-        h, conv = reset_state_slot(layers["h"], layers["conv"], slot)
+        h, conv = reset_state_slot(layers["h"], layers["conv"], slot,
+                                   apply=apply)
         new["layers"] = dict(layers, h=h, conv=conv)
     return new

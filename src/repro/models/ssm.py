@@ -17,7 +17,8 @@ import math
 import jax
 import jax.numpy as jnp
 
-from .common import ModelConfig, dense, ninit, split_keys
+from .common import (ModelConfig, dense, gated_update_slice, ninit,
+                     split_keys)
 
 
 def init_mamba(key, cfg: ModelConfig, prefix: str = "ssm_"):
@@ -147,19 +148,21 @@ def mamba_block(cfg: ModelConfig, p, x, h0=None, conv0=None,
     return dense(y.astype(x.dtype), p[f"{prefix}out_w"]), hf, conv_tail
 
 
-def reset_state_slot(h, conv, slot):
+def reset_state_slot(h, conv, slot, apply=None):
     """Zero ONE batch slot of stacked SSM state (L, B, ...).
 
     Attention slots are implicitly reset by masking reads to ``pos`` and
     overwriting writes, but the recurrent state feeds forward unmasked —
     admitting a new request into a slot MUST clear it (the prefill merge
     overwrites it too; this is the parked-slot reset that keeps a drained
-    slot from integrating garbage between requests).
+    slot from integrating garbage between requests).  ``apply`` (traced
+    bool) value-gates the zeroing: the slot-sharded engine runs the park
+    on every shard and lets the owner alone commit it.
     """
     def zero(buf):
         z = jnp.zeros(buf.shape[:1] + (1,) + buf.shape[2:], buf.dtype)
         idx = (0, slot) + (0,) * (buf.ndim - 2)
-        return jax.lax.dynamic_update_slice(buf, z, idx)
+        return gated_update_slice(buf, z, idx, apply)
 
     return zero(h), zero(conv)
 

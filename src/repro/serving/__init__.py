@@ -1,8 +1,10 @@
 from .engine import ServeEngine, GenerationResult
 from .scheduler import (AdmissionPolicy, ContinuousEngine, FifoPolicy,
-                        Request, RequestResult, ShortestPromptFirst,
-                        SlotScheduler, TtftDeadline)
+                        Request, RequestResult, ShardedSlotScheduler,
+                        ShortestPromptFirst, SlotScheduler, TtftDeadline)
+from .sharded import ShardedContinuousEngine
 
 __all__ = ["ServeEngine", "GenerationResult", "ContinuousEngine",
-           "Request", "RequestResult", "SlotScheduler", "AdmissionPolicy",
+           "ShardedContinuousEngine", "Request", "RequestResult",
+           "SlotScheduler", "ShardedSlotScheduler", "AdmissionPolicy",
            "FifoPolicy", "ShortestPromptFirst", "TtftDeadline"]

@@ -61,6 +61,13 @@ _advance_key = jax.jit(lambda key, n: jax.lax.fori_loop(
 # reuses both the traces and the per-shape executables under them (mixed
 # prompt lengths share one callable, so each length compiles once per
 # process, not once per engine).
+#
+# Keys must capture EVERYTHING the trace closes over.  In particular every
+# engine key carries a mesh fingerprint (``sharding.mesh_fingerprint``;
+# None for unsharded engines): a slot-sharded engine's programs are
+# shard_map-wrapped over a specific mesh, so handing them to an unsharded
+# engine — or to one on a different mesh/device set — would be a silent
+# cross-engine collision (ISSUE-5).
 _PROGRAM_CACHE: Dict[Any, Any] = {}
 
 

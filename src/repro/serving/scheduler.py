@@ -25,6 +25,13 @@ WHICH queued request a free slot admits is a pluggable
 ``AdmissionPolicy`` (FIFO, shortest-prompt-first, TTFT-deadline
 least-slack) behind ``SlotScheduler.next_admission``.
 
+The engine also scales out: ``serving.sharded.ShardedContinuousEngine``
+runs this same loop with the slot axis sharded over a 'data' mesh
+(DESIGN.md §10) — ``ShardedSlotScheduler`` here does its shard-routed
+admission bookkeeping, and the construction hooks on ``ContinuousEngine``
+(``_build_programs`` / ``_build_lane`` / ``_make_sched`` / lane-cursor
+plumbing) are the seams it overrides.
+
 The whole design leans on the per-slot position plumbing: ``cache["pos"]``
 is a (B,) vector, each slot ropes/writes/attends at its own offset, and
 ``prefill_into_slot`` scatters a batch-1 prefill into one slot of the live
@@ -56,7 +63,7 @@ from repro.core.qtensor import QuantPolicy, direct_cast_tree
 from repro.kernels.ops import quantize_qtensor
 from repro.models import (decode_loop, init_cache, init_lane, prefill_chunk,
                           prefill_into_slot, reset_slot)
-from repro.models.common import ModelConfig
+from repro.models.common import ModelConfig, gated_update_slice
 from .engine import cached_program, mask_chunk_emissions
 
 logger = logging.getLogger("repro.serving.scheduler")
@@ -230,6 +237,68 @@ class SlotScheduler:
         return bool(self.queue or self.active)
 
 
+class ShardedSlotScheduler(SlotScheduler):
+    """Slot bookkeeping over a sharded slot axis: global slot ids map to
+    ``(shard, local_slot)`` and admission is ROUTED to the owning shard.
+
+    The slot-sharded engine (``serving.sharded``) partitions the B-slot
+    cache as S contiguous blocks of ``slots_per_shard`` slots, one block
+    per 'data'-mesh shard — so slot ``g`` lives on shard ``g // L`` at
+    local index ``g % L``.  ``next_admission`` still lets the
+    ``AdmissionPolicy`` rank the queue (WHICH request), but the SLOT now
+    comes from a specific shard: the caller's shard when given (each
+    shard runs its own prefill lane), else the least-loaded shard with a
+    free slot (ties break to the lowest shard id) — spreading decode
+    occupancy evenly instead of FIFO free-list order piling early
+    admissions onto shard 0.
+
+    Pure host bookkeeping — no mesh or devices needed, which is what
+    keeps the routing logic unit-testable outside a subprocess.
+    """
+
+    def __init__(self, n_shards: int, slots_per_shard: int,
+                 policy: Optional[AdmissionPolicy] = None):
+        super().__init__(n_shards * slots_per_shard, policy)
+        self.n_shards = n_shards
+        self.slots_per_shard = slots_per_shard
+
+    def shard_of(self, slot: int) -> int:
+        return slot // self.slots_per_shard
+
+    def local_slot(self, slot: int) -> int:
+        return slot % self.slots_per_shard
+
+    def load(self, shard: int) -> int:
+        """Occupied slots on ``shard`` (prefilling and decoding alike)."""
+        return sum(1 for s in self.active if self.shard_of(s) == shard)
+
+    def free_on(self, shard: int) -> List[int]:
+        return [s for s in self.free if self.shard_of(s) == shard]
+
+    def next_admission(self, now: float, shard: Optional[int] = None
+                       ) -> Optional[Tuple[int, Request]]:
+        """Pop (global_slot, request), routed to ``shard`` (or least-loaded)."""
+        if not self.queue:
+            return None
+        if shard is None:
+            with_free = {self.shard_of(s) for s in self.free}
+            if not with_free:
+                return None
+            shard = min(with_free, key=lambda s: (self.load(s), s))
+        free = self.free_on(shard)
+        if not free:
+            return None
+        idx = self.policy.select(self.queue, now)
+        if idx is None:
+            return None
+        slot = free[0]
+        self.free.remove(slot)
+        req = self.queue.pop(idx)
+        self.active[slot] = req
+        self.phase[slot] = DECODING
+        return slot, req
+
+
 class ContinuousEngine:
     """Continuous-batching serving over one persistent B-slot device cache.
 
@@ -256,37 +325,47 @@ class ContinuousEngine:
     def __init__(self, cfg: ModelConfig, params, policy: QuantPolicy,
                  n_slots: int = 4, max_len: int = 2048, chunk: int = 16,
                  warn_compile: bool = True, prefill_mode: str = "whole",
-                 p_chunk: int = 32,
-                 admission_policy: Optional[AdmissionPolicy] = None):
+                 p_chunk=32,
+                 admission_policy: Optional[AdmissionPolicy] = None,
+                 p_chunk_candidates: Sequence[int] = (16, 32, 64, 128)):
         self.cfg = cfg
         self.policy = policy
         self.n_slots = n_slots
         self.max_len = max_len
         self.chunk = chunk
-        self.params = (direct_cast_tree(params, policy,
-                                        quantize_fn=quantize_qtensor)
-                       if policy.weight_fmt else params)
+        params = (direct_cast_tree(params, policy,
+                                   quantize_fn=quantize_qtensor)
+                  if policy.weight_fmt else params)
         kv = policy.kv_fmt
         self._kv = kv
         self.admission_policy = admission_policy
         assert prefill_mode in ("whole", "chunked"), prefill_mode
         self.prefill_mode = prefill_mode
-        self._prefill = cached_program(
-            ("admit", cfg, kv, max_len),
-            lambda: jax.jit(functools.partial(
-                self._admit_fn, cfg=cfg, kv_fmt=kv, max_len=max_len)))
-        self._reset = cached_program(
-            ("reset", cfg),
-            lambda: jax.jit(functools.partial(reset_slot, cfg)))
-        self._chunk_jit = cached_program(
-            ("cont_chunk", cfg, kv),
-            lambda: jax.jit(
-                functools.partial(self._chunk_fn, cfg=cfg, kv_fmt=kv),
-                static_argnames=("n_steps", "greedy")))
+        # compile-cache keys carry the mesh identity (None = unsharded):
+        # a sharded and an unsharded engine on identical (cfg, kv, ...)
+        # must never hand each other executables (ISSUE-5)
+        self._mesh_key = self._mesh_fingerprint()
+        self.params = self._place_params(params)
+        self._build_programs()
+        self._pf: Optional[Any] = None      # in-flight lane cursor(s)
+        self.cache = self._init_slot_cache()
+        self._seen_prompt_lens: set = set()
+        self._warn_compile = warn_compile
+        # host-visible slot state (tiny; re-uploaded each chunk call)
+        self._tok = np.zeros((n_slots,), np.int32)
+        self._keys = np.zeros((n_slots, 2), np.uint32)
+        self._done = np.ones((n_slots,), bool)      # all parked
+        self._live = np.zeros((n_slots,), bool)     # admitted AND decoding
+        self._n_gen = np.zeros((n_slots,), np.int32)
+        self._max_new = np.zeros((n_slots,), np.int32)
+        self._temp = np.zeros((n_slots,), np.float32)
+        self._stop = np.full((n_slots,), -1, np.int32)
         if prefill_mode == "chunked":
             if cfg.family not in ("dense", "moe", "ssm", "hybrid"):
                 raise ValueError(f"chunked prefill does not serve "
                                  f"family={cfg.family!r}")
+            if p_chunk == "auto":
+                p_chunk = self._autotune_p_chunk(p_chunk_candidates)
             if cfg.sliding_window and p_chunk > cfg.sliding_window:
                 # one lane chunk must hit distinct ring rows
                 raise ValueError(f"p_chunk ({p_chunk}) must be <= "
@@ -303,32 +382,138 @@ class ContinuousEngine:
                     "bit-identical to whole-prompt admission (use "
                     "prefill_mode='whole' when the oracle matters)")
             self.p_chunk = p_chunk
-            self.lane = init_lane(cfg, max_len, p_chunk)
             # natural-order scratch rows: ABSOLUTE prompt offsets index
             # the lane, so prompts longer than this must fail loudly at
             # submit (SWA rings wrap the LIVE cache, but a clamped lane
             # write would silently corrupt rows inside the window)
             self._lane_rows = -(-max_len // p_chunk) * p_chunk
-            self._lane_fn = cached_program(
-                ("lane", cfg, kv, p_chunk),
+            self._build_lane()
+
+    # -- construction hooks (the sharded engine overrides these) ------------
+
+    def _mesh_fingerprint(self):
+        """Hashable mesh identity for compile-cache keys (unsharded: None)."""
+        return None
+
+    def _place_params(self, params):
+        """Device placement for the (cast) weights (unsharded: as-is)."""
+        return params
+
+    def _init_slot_cache(self):
+        return init_cache(self.cfg, self.n_slots, self.max_len, self._kv)
+
+    def _build_programs(self) -> None:
+        cfg, kv, max_len, mk = self.cfg, self._kv, self.max_len, self._mesh_key
+        self._prefill = cached_program(
+            ("admit", cfg, kv, max_len, mk),
+            lambda: jax.jit(functools.partial(
+                self._admit_fn, cfg=cfg, kv_fmt=kv, max_len=max_len)))
+        self._reset = cached_program(
+            ("reset", cfg, mk),
+            lambda: jax.jit(functools.partial(reset_slot, cfg)))
+        self._chunk_jit = cached_program(
+            ("cont_chunk", cfg, kv, mk),
+            lambda: jax.jit(
+                functools.partial(self._chunk_fn, cfg=cfg, kv_fmt=kv),
+                static_argnames=("n_steps", "greedy")))
+
+    def _build_lane(self) -> None:
+        cfg, kv, mk = self.cfg, self._kv, self._mesh_key
+        self.lane = init_lane(cfg, self.max_len, self.p_chunk)
+        self._lane_fn = cached_program(
+            ("lane", cfg, kv, self.p_chunk, mk),
+            lambda: jax.jit(functools.partial(
+                self._lane_chunk_fn, cfg=cfg, kv_fmt=kv),
+                static_argnames=("with_head",)))
+        self._finish = cached_program(
+            ("finish", cfg, mk), lambda: jax.jit(self._finish_prefill_fn))
+
+    # -- p_chunk autotuning (ROADMAP follow-up) -----------------------------
+
+    def _time_best(self, fn, n: int = 3) -> float:
+        jax.block_until_ready(fn())             # compile + warm
+        times = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            times.append(time.perf_counter() - t0)
+        return min(times)       # dispatch noise only: min is honest
+
+    def _autotune_probes(self):
+        """(decode chunk fn, params, probe cache, probe slot count).
+
+        Both sides of the stall-budget comparison must run in ONE
+        execution regime, so the base engine probes its own programs
+        against its own cache.  The sharded engine overrides this to
+        probe the PER-SHARD bodies on a single device (its real decode
+        program is shard_map'd but the lane probe is not — timing one
+        side through GSPMD resharding would skew the ratio).
+        """
+        return self._chunk_jit, self.params, self.cache, self.n_slots
+
+    def _autotune_p_chunk(self, candidates: Sequence[int],
+                          stall_factor: float = 2.0) -> int:
+        """Pick the lane chunk from a short warmup sweep (p_chunk="auto").
+
+        The tradeoff is the one ``serving_bench``'s chunk-size rows
+        measure: a BIGGER lane chunk amortizes dispatch overhead (fewer
+        lane dispatches per prompt -> faster prefill, better aggregate
+        tok/s) but stalls every decoding slot LONGER per chunk (worse
+        decode tail latency) — and the crossover is a backend property,
+        not a constant (the CPU optimum is a dispatch-overhead artifact;
+        ROADMAP flags re-measuring on TPU).  So: time one decode chunk
+        (the stall unit the lane interleaves with) and one lane dispatch
+        per candidate, then take the highest-throughput candidate whose
+        lane chunk costs at most ``stall_factor`` decode chunks; if none
+        qualifies, the smallest candidate (tightest stall bound) wins.
+        Candidates violating the lane's static constraints (SWA ring
+        width, ssm_chunk alignment, max_len) are dropped up front.
+        Results stay on ``self.p_chunk_sweep`` for benches to report.
+        """
+        cfg, kv = self.cfg, self._kv
+        cands = sorted({int(p) for p in candidates if p <= self.max_len
+                        and (not cfg.sliding_window
+                             or p <= cfg.sliding_window)
+                        and (cfg.family not in ("ssm", "hybrid")
+                             or p % cfg.ssm_chunk == 0)})
+        if not cands:
+            raise ValueError(f"p_chunk='auto': no candidate in "
+                             f"{tuple(candidates)} satisfies the lane "
+                             f"constraints of {cfg.name}")
+        chunk_fn, params, cache, b = self._autotune_probes()
+        zi = jnp.zeros((b,), jnp.int32)
+        decode_s = self._time_best(lambda: chunk_fn(
+            params, zi, cache, jnp.zeros((b, 2), jnp.uint32),
+            jnp.ones((b,), bool), zi, zi, jnp.zeros((b,), jnp.float32),
+            jnp.full((b,), -1, jnp.int32), jnp.zeros((b,), bool),
+            n_steps=self.chunk, greedy=True))
+        self.p_chunk_sweep: Dict[int, float] = {}
+        for p in cands:
+            lane = init_lane(cfg, self.max_len, p)
+            # keyed like the unsharded lane program, so the winner's
+            # compile is reused by _build_lane (and by every later
+            # engine on the same config); the sharded engine's per-shard
+            # lane body is this same batch-1 computation, so the choice
+            # transfers even though its fused program is keyed apart
+            fn = cached_program(
+                ("lane", cfg, kv, p, None),
                 lambda: jax.jit(functools.partial(
                     self._lane_chunk_fn, cfg=cfg, kv_fmt=kv),
                     static_argnames=("with_head",)))
-            self._finish = cached_program(
-                ("finish", cfg), lambda: jax.jit(self._finish_prefill_fn))
-        self._pf: Optional[Dict[str, Any]] = None   # in-flight lane cursor
-        self.cache = init_cache(cfg, n_slots, max_len, kv)
-        self._seen_prompt_lens: set = set()
-        self._warn_compile = warn_compile
-        # host-visible slot state (tiny; re-uploaded each chunk call)
-        self._tok = np.zeros((n_slots,), np.int32)
-        self._keys = np.zeros((n_slots, 2), np.uint32)
-        self._done = np.ones((n_slots,), bool)      # all parked
-        self._live = np.zeros((n_slots,), bool)     # admitted AND decoding
-        self._n_gen = np.zeros((n_slots,), np.int32)
-        self._max_new = np.zeros((n_slots,), np.int32)
-        self._temp = np.zeros((n_slots,), np.float32)
-        self._stop = np.full((n_slots,), -1, np.int32)
+            toks = np.zeros((1, p), np.int32)
+            self.p_chunk_sweep[p] = self._time_best(lambda: fn(
+                params, toks, cache, lane, jnp.int32(0),
+                jnp.int32(0), jnp.int32(p), with_head=False))
+        budget = stall_factor * decode_s
+        ok = [p for p in cands if self.p_chunk_sweep[p] <= budget]
+        best = (max(ok, key=lambda p: p / self.p_chunk_sweep[p]) if ok
+                else cands[0])
+        logger.info(
+            "p_chunk autotune: decode chunk %.2fms, sweep {%s} -> %d",
+            decode_s * 1e3,
+            ", ".join(f"{p}: {s * 1e3:.2f}ms"
+                      for p, s in self.p_chunk_sweep.items()), best)
+        return best
 
     # -- jitted bodies ------------------------------------------------------
 
@@ -377,18 +562,22 @@ class ContinuousEngine:
                              n_valid, lane, kv_fmt, with_head=with_head)
 
     @staticmethod
-    def _finish_prefill_fn(logits, key, temperature, cache, slot, t):
+    def _finish_prefill_fn(logits, key, temperature, cache, slot, t,
+                           apply=None):
         """Final-chunk tail: sample the first token and un-park the slot.
 
         The lane's final logits ARE the whole-prompt prefill logits, and
         the sample is the shared ``_first_token``, so the first token
         (greedy or the seed chain's categorical) matches the monolithic
-        path exactly.  ``pos[slot] <- t`` arms the slot for decode.
+        path exactly.  ``pos[slot] <- t`` arms the slot for decode;
+        ``apply`` (traced bool) owner-masks the arm for the sharded
+        engine, which wraps this same tail per shard.
         """
         tok0, key_out = ContinuousEngine._first_token(logits, key,
                                                       temperature)
-        pos = jax.lax.dynamic_update_slice(
-            cache["pos"], jnp.asarray(t, jnp.int32).reshape(1), (slot,))
+        pos = gated_update_slice(cache["pos"],
+                                 jnp.asarray(t, jnp.int32).reshape(1),
+                                 (slot,), apply)
         return tok0, key_out, dict(cache, pos=pos)
 
     @staticmethod
@@ -447,6 +636,15 @@ class ContinuousEngine:
         self._temp[slot] = req.temperature
         self._stop[slot] = -1 if req.stop_token is None else req.stop_token
 
+    def _admit_dispatch(self, slot: int, req: Request):
+        """Run the whole-prompt admission program; host (tok0, key) out."""
+        batch = {"tokens": np.asarray(req.tokens, np.int32)[None]}
+        key = jax.random.PRNGKey(req.seed)
+        tok0, key, self.cache = self._prefill(
+            self.params, batch, self.cache, jnp.int32(slot), key,
+            jnp.float32(req.temperature))
+        return tok0, key
+
     def _admit(self, slot: int, req: Request, now: float,
                clock) -> Dict[str, Any]:
         t = len(req.tokens)
@@ -454,11 +652,7 @@ class ContinuousEngine:
             self._seen_prompt_lens.add(t)
             logger.info("first prompt of length %d: compiling prefill "
                         "(bucket prompt lengths to bound compiles)", t)
-        batch = {"tokens": np.asarray(req.tokens, np.int32)[None]}
-        key = jax.random.PRNGKey(req.seed)
-        tok0, key, self.cache = self._prefill(
-            self.params, batch, self.cache, jnp.int32(slot), key,
-            jnp.float32(req.temperature))
+        tok0, key = self._admit_dispatch(slot, req)
         self._arm_slot(slot, req, tok0, key)
         admit_done = clock()
         logger.info("admit uid=%d slot=%d prompt=%d max_new=%d "
@@ -466,6 +660,59 @@ class ContinuousEngine:
                     now - req.arrival_time)
         return {"admit_time": now, "first_token_time": admit_done,
                 "out": [], "prev_n_gen": 0}
+
+    def _admit_ready(self, sched: SlotScheduler, state: Dict[int, Any],
+                     now: float, clock) -> None:
+        """Whole-prompt admission: drain every (free slot, arrived req) pair."""
+        while True:
+            adm = sched.next_admission(now)
+            if adm is None:
+                return
+            slot, req = adm
+            state[slot] = self._admit(slot, req, now, clock)
+
+    # lane-cursor plumbing (the sharded engine keeps one cursor PER SHARD)
+    def _park_lane(self) -> None:
+        self._pf = None
+
+    def _lane_busy(self) -> bool:
+        return self._pf is not None
+
+    def _decode_live(self):
+        """The ``live`` argument for the decode chunk.
+
+        Whole mode never has a mid-prefill rider, so it skips the live
+        gating entirely (``None`` lowers to the cheaper PR-3 decode path;
+        parked-slot garbage writes are harmless there because admission
+        overwrites the whole slot).
+        """
+        if self.prefill_mode != "chunked":
+            return None
+        return jnp.asarray(self._live)
+
+    def _make_sched(self) -> SlotScheduler:
+        return SlotScheduler(self.n_slots, policy=self.admission_policy)
+
+    def _start_prefill(self, sched: SlotScheduler, slot: int, req: Request,
+                       now: float, shard=None) -> Dict[str, Any]:
+        """Park a slot for lane feeding; returns its lane cursor.
+
+        The parked-slot invariants live HERE, once: the slot rides the
+        decode batch write-masked until armed, so its live/done flags and
+        sampling vectors must be cleared before the next decode chunk —
+        the sharded engine's per-shard lanes reuse this parking verbatim.
+        """
+        sched.mark_prefilling(slot)
+        self._live[slot] = False
+        self._done[slot] = True
+        self._temp[slot] = 0.0
+        self._stop[slot] = -1
+        logger.info("prefill-start uid=%d%s slot=%d prompt=%d chunks=%d "
+                    "queue_delay=%.3fs", req.uid,
+                    "" if shard is None else f" shard={shard}", slot,
+                    len(req.tokens), -(-len(req.tokens) // self.p_chunk),
+                    now - req.arrival_time)
+        return {"slot": slot, "req": req, "offset": 0, "admit_time": now}
 
     def _advance_lane(self, sched: SlotScheduler, state: Dict[int, Any],
                       clock) -> None:
@@ -482,18 +729,7 @@ class ContinuousEngine:
             if adm is None:
                 return
             slot, req = adm
-            sched.mark_prefilling(slot)
-            # the slot rides the decode batch write-masked until armed
-            self._live[slot] = False
-            self._done[slot] = True
-            self._temp[slot] = 0.0
-            self._stop[slot] = -1
-            self._pf = {"slot": slot, "req": req, "offset": 0,
-                        "admit_time": now}
-            logger.info("prefill-start uid=%d slot=%d prompt=%d chunks=%d "
-                        "queue_delay=%.3fs", req.uid, slot, len(req.tokens),
-                        -(-len(req.tokens) // self.p_chunk),
-                        now - req.arrival_time)
+            self._pf = self._start_prefill(sched, slot, req, now)
         pf = self._pf
         slot, req, off = pf["slot"], pf["req"], pf["offset"]
         t = len(req.tokens)
@@ -533,7 +769,7 @@ class ContinuousEngine:
         Idle gaps (queue non-empty but nothing arrived) sleep to the next
         arrival instead of spinning.
         """
-        sched = SlotScheduler(self.n_slots, policy=self.admission_policy)
+        sched = self._make_sched()
         for r in requests:
             # reject overflow up front: a full-cache slot would clamp-write
             # its last row and return garbage with no error (SWA caches are
@@ -561,7 +797,7 @@ class ContinuousEngine:
         # live/done flags into the fresh scheduler — an orphaned slot the
         # new free-list also hands out. Admission overwrites parked
         # slots' cache wholesale, so flags are the only state to clear.
-        self._pf = None
+        self._park_lane()
         self._live[:] = False
         self._done[:] = True
         t0 = time.time()
@@ -575,30 +811,21 @@ class ContinuousEngine:
             if chunked:
                 self._advance_lane(sched, state, clock)
             else:
-                while True:
-                    adm = sched.next_admission(now)
-                    if adm is None:
-                        break
-                    slot, req = adm
-                    state[slot] = self._admit(slot, req, now, clock)
+                self._admit_ready(sched, state, now, clock)
             if not self._live.any():
-                if chunked and self._pf is not None:
+                if chunked and self._lane_busy():
                     continue            # lane keeps grinding, no decoders
                 nxt = sched.next_arrival()
                 assert nxt is not None
                 time.sleep(max(nxt - clock(), 0.0))
                 continue
 
-            # whole mode never has a mid-prefill rider, so it skips the
-            # live gating entirely (live=None lowers to the cheaper PR-3
-            # decode path; parked-slot garbage writes are harmless there
-            # because admission overwrites the whole slot)
             emitted, tok, self.cache, keys, done, n_gen = self._chunk_jit(
                 self.params, jnp.asarray(self._tok), self.cache,
                 jnp.asarray(self._keys), jnp.asarray(self._done),
                 jnp.asarray(self._n_gen), jnp.asarray(self._max_new),
                 jnp.asarray(self._temp), jnp.asarray(self._stop),
-                jnp.asarray(self._live) if chunked else None,
+                self._decode_live(),
                 n_steps=self.chunk,
                 greedy=bool((self._temp == 0.0).all()))
             # one host transfer per chunk; copies (not views) because the

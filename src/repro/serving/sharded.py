@@ -1,0 +1,370 @@
+"""Slot-sharded continuous serving: the slot axis over a 'data' mesh.
+
+``ContinuousEngine`` runs one host loop against one device.  This module
+scales the SAME loop over a multi-device 'data' mesh (DESIGN.md §10): the
+B-slot cache is partitioned as S contiguous blocks of ``n_slots / S``
+slots, one block per shard, and every dispatch that touches it — the
+decode chunk, the chunked-prefill lane, whole-prompt admission, the
+first-token finish and the eviction park — runs under a FULLY-MANUAL
+``shard_map`` (``sharding.shard_map_manual``; manual over every mesh
+axis, which is the one shard_map shape the CPU partitioner does not
+CHECK-abort on, so the bitwise oracle can run under
+``--xla_force_host_platform_device_count``).
+
+Inside the manual body each shard sees the plain per-shard
+continuous-batching problem: local (B/S,) slot vectors, a local cache
+slice, its OWN batch-1 prefill lane.  Decode is row-independent end to
+end (per-slot rope/ring-write/masked-attend/sampling — the PR-3
+invariant), so the body is literally ``ContinuousEngine._chunk_fn`` and
+greedy outputs are bit-identical to the unsharded engine, which stays
+the oracle.  Slot surgery targets ONE global slot; every shard runs the
+same program and the owner (``slot // slots_per_shard``) alone commits
+the write, via the value-gated row updates threaded through
+``write_cache_slot`` / ``reset_slot`` / ``layer_prefill_chunk``
+(``apply=``) — no full-cache selects.
+
+Weights are replicated over the mesh (``P()``); model-axis tensor
+parallelism composes via a partial-auto shard_map (manual 'data', auto
+'model') — a TPU-only shape, gated like the gradient wire
+(``sharding.partial_auto_ok``), left to the first real-TPU run.
+
+The payoff over one-host serving: S shards decode S×B_local slots for
+one dispatch's host latency, admission routes to the least-loaded shard
+(``ShardedSlotScheduler``), and each shard owns a prefill LANE — S
+prompts mid-prefill concurrently where PR 4 had one global lane, with
+idle shards riding the fused lane dispatch as no-ops (``n_valid=0``
+drops their scatter rows; ``active=False`` gates their SSM writes).
+"""
+from __future__ import annotations
+
+import functools
+import logging
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.qtensor import QuantPolicy
+from repro.models import (init_cache, init_lane, prefill_chunk,
+                          prefill_into_slot, reset_slot)
+from repro.models.common import ModelConfig
+from repro.sharding import (mesh_fingerprint, shard_map_manual,
+                            slot_cache_specs)
+from .engine import cached_program
+from .scheduler import (ContinuousEngine, ShardedSlotScheduler,
+                        SlotScheduler)
+
+logger = logging.getLogger("repro.serving.scheduler")
+
+_R = P()            # replicated
+_Pd = P("data")     # leading dim over the slot shards
+
+
+def _owner_apply(slot, nloc):
+    """(owner shard, local slot, am-I-the-owner) for a global slot.
+
+    Every shard evaluates the same expression inside the manual body;
+    ``local`` is in range on every shard (same value everywhere), and
+    only the owner's ``apply`` is True — the value-gated updates
+    (``common.gated_update_slice``) do the rest.
+    """
+    owner = slot // nloc
+    return owner, slot - owner * nloc, \
+        jax.lax.axis_index("data") == owner
+
+
+class ShardedContinuousEngine(ContinuousEngine):
+    """``ContinuousEngine`` with the slot axis sharded over 'data'.
+
+    Same host loop, same request semantics, same bitwise guarantees as
+    the unsharded engine (greedy outputs are bit-identical — the
+    unsharded engine is the oracle; see tests/test_sharded_serving.py).
+    Requires an effectively 1-D ``('data',)`` mesh of S devices with
+    ``n_slots % S == 0``; every other constructor argument matches
+    ``ContinuousEngine``.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, policy: QuantPolicy,
+                 mesh, n_slots: int = 4, **kw):
+        if "data" not in mesh.axis_names:
+            raise ValueError(f"slot sharding needs a 'data' mesh axis, "
+                             f"got {mesh.axis_names}")
+        extra = [a for a in mesh.axis_names
+                 if a != "data" and mesh.shape[a] != 1]
+        if extra:
+            # model-axis TP inside the manual region would need manual
+            # collectives the model bodies don't emit; the composed
+            # manual-data/auto-model shape is partial-auto = TPU-only
+            raise ValueError(f"fully-manual slot sharding supports a "
+                             f"data-only mesh; non-trivial axes {extra}")
+        s = int(mesh.shape["data"])
+        if n_slots % s:
+            raise ValueError(f"n_slots ({n_slots}) must be divisible by "
+                             f"the 'data' axis ({s})")
+        self.mesh = mesh
+        self.n_shards = s
+        self.slots_per_shard = n_slots // s
+        super().__init__(cfg, params, policy, n_slots=n_slots, **kw)
+
+    # -- placement ----------------------------------------------------------
+
+    def _mesh_fingerprint(self):
+        return mesh_fingerprint(self.mesh)
+
+    def _place_params(self, params):
+        rep = NamedSharding(self.mesh, _R)
+        return jax.device_put(params, jax.tree.map(lambda _: rep, params))
+
+    def _init_slot_cache(self):
+        cache = init_cache(self.cfg, self.n_slots, self.max_len, self._kv)
+        put = {n: jax.tree.map(
+            lambda _, sp=self._cspec[n]: NamedSharding(self.mesh, sp),
+            cache[n]) for n in cache}
+        return jax.device_put(cache, put)
+
+    # -- shard_map'd programs ------------------------------------------------
+
+    def _build_programs(self) -> None:
+        cfg, kv, max_len = self.cfg, self._kv, self.max_len
+        mesh, mk, nloc = self.mesh, self._mesh_key, self.slots_per_shard
+        cspec = self._cspec = slot_cache_specs(jax.eval_shape(
+            lambda: init_cache(cfg, self.n_slots, max_len, kv)))
+
+        def admit_body(params, batch, cache, slot, key, temperature):
+            # the batch-1 prefill runs REPLICATED (same inputs, same ops,
+            # same order on every shard — compute is wasted, bits are
+            # identical); only the owner commits the slot scatter
+            _, local, apply = _owner_apply(slot, nloc)
+            logits, new_cache = prefill_into_slot(
+                cfg, params, batch, cache, local, max_len, kv, apply=apply)
+            tok0, key_out = ContinuousEngine._first_token(
+                logits, key, temperature)
+            # replicated scalars leave as a (S,)-stacked 'data' dim (all
+            # rows equal) — the host reads the owner's row; out_specs P()
+            # would need a replication proof the manual body can't give
+            return tok0.reshape(1), key_out.reshape(1, 2), new_cache
+
+        # nloc rides every key whose body closes over it: engines with a
+        # different n_slots on the SAME mesh map slots differently
+        self._prefill = cached_program(
+            ("admit", cfg, kv, max_len, mk, nloc),
+            lambda: jax.jit(shard_map_manual(
+                admit_body, mesh,
+                in_specs=(_R, _R, cspec, _R, _R, _R),
+                out_specs=(_Pd, _Pd, cspec))))
+
+        def reset_body(cache, slot):
+            _, local, apply = _owner_apply(slot, nloc)
+            return reset_slot(cfg, cache, local, apply=apply)
+
+        self._reset = cached_program(
+            ("reset", cfg, mk, nloc),
+            lambda: jax.jit(shard_map_manual(
+                reset_body, mesh, in_specs=(cspec, _R), out_specs=cspec)))
+
+        # the decode chunk body IS the unsharded one — decode is row-
+        # independent, so manual sharding is pure slicing (the bitwise
+        # oracle rests exactly here); only (n_steps, greedy) are static
+        chunk_in = (_R, _Pd, cspec, _Pd, _Pd, _Pd, _Pd, _Pd, _Pd, _Pd)
+        chunk_out = (_Pd, _Pd, cspec, _Pd, _Pd, _Pd)
+
+        def build_chunk():
+            memo: Dict[Any, Any] = {}
+
+            def chunk(params, tok, cache, keys, done, n_gen, max_new,
+                      temp, stop, live, *, n_steps: int, greedy: bool):
+                fn = memo.get((n_steps, greedy))
+                if fn is None:
+                    body = functools.partial(
+                        ContinuousEngine._chunk_fn, cfg=cfg, kv_fmt=kv,
+                        n_steps=n_steps, greedy=greedy)
+                    fn = memo[(n_steps, greedy)] = jax.jit(shard_map_manual(
+                        body, mesh, in_specs=chunk_in, out_specs=chunk_out))
+                return fn(params, tok, cache, keys, done, n_gen, max_new,
+                          temp, stop, live)
+
+            return chunk
+
+        self._chunk_jit = cached_program(("cont_chunk", cfg, kv, mk),
+                                         build_chunk)
+
+    def _build_lane(self) -> None:
+        cfg, kv, mesh, mk = self.cfg, self._kv, self.mesh, self._mesh_key
+        cspec, pch = self._cspec, self.p_chunk
+        lspec = P(None, "data")     # lane leaves stack shards at axis 1
+        lane = init_lane(cfg, self.max_len, pch, n_lanes=self.n_shards)
+        self.lane = jax.device_put(lane, jax.tree.map(
+            lambda _: NamedSharding(mesh, lspec), lane))
+
+        def lane_body(params, toks, cache, lane, slot, offset, n_valid,
+                      active, *, with_head: bool):
+            # local view: ONE shard's lane advancing its own in-flight
+            # prompt by one (1, P) chunk — idle shards run the same
+            # program as a no-op (n_valid=0 drops every scatter row,
+            # active=False gates the SSM slot writes)
+            out, new_cache, new_lane = prefill_chunk(
+                cfg, params, toks, cache, slot[0], offset[0], n_valid[0],
+                lane, kv, with_head=with_head, active=active[0])
+            return out, new_cache, new_lane
+
+        def build_lane_fn():
+            memo: Dict[bool, Any] = {}
+
+            def lane_fn(params, toks, cache, lane, slot, offset, n_valid,
+                        active, *, with_head: bool):
+                fn = memo.get(with_head)
+                if fn is None:
+                    body = functools.partial(lane_body,
+                                             with_head=with_head)
+                    fn = memo[with_head] = jax.jit(shard_map_manual(
+                        body, mesh,
+                        in_specs=(_R, _Pd, cspec, lspec, _Pd, _Pd, _Pd,
+                                  _Pd),
+                        out_specs=(_Pd, cspec, lspec)))
+                return fn(params, toks, cache, lane, slot, offset,
+                          n_valid, active)
+
+            return lane_fn
+
+        self._lane_fn = cached_program(("lane", cfg, kv, pch, mk),
+                                       build_lane_fn)
+        nloc = self.slots_per_shard
+
+        def finish_body(logits, key, temperature, cache, slot, t):
+            # the unsharded finish tail, owner-masked: first-token
+            # equality stays shared code, not a copy
+            _, local, apply = _owner_apply(slot, nloc)
+            tok0, key_out, new_cache = ContinuousEngine._finish_prefill_fn(
+                logits, key, temperature, cache, local, t, apply=apply)
+            return tok0.reshape(1), key_out.reshape(1, 2), new_cache
+
+        self._finish = cached_program(
+            ("finish", cfg, mk, nloc),
+            lambda: jax.jit(shard_map_manual(
+                finish_body, mesh,
+                in_specs=(_R, _R, _R, cspec, _R, _R),
+                out_specs=(_Pd, _Pd, cspec))))
+
+    def _autotune_probes(self):
+        """Probe the PER-SHARD bodies on one device (see base docstring).
+
+        The per-shard decode workload is ``slots_per_shard`` slots
+        through the UNSHARDED chunk program (keyed with mesh None, so
+        it's shared with any unsharded engine on this config), against a
+        throwaway single-device cache, with params pinned to one device
+        — both sides of the stall-budget ratio then measure the same
+        regime, free of the GSPMD resharding a mesh-placed input would
+        drag into the timings.
+        """
+        cfg, kv = self.cfg, self._kv
+        fn = cached_program(
+            ("cont_chunk", cfg, kv, None),
+            lambda: jax.jit(functools.partial(
+                ContinuousEngine._chunk_fn, cfg=cfg, kv_fmt=kv),
+                static_argnames=("n_steps", "greedy")))
+        b = self.slots_per_shard
+        dev = jax.devices()[0]
+        params = jax.device_put(self.params, dev)
+        cache = jax.device_put(
+            init_cache(cfg, b, self.max_len, kv), dev)
+        return fn, params, cache, b
+
+    # -- host loop deltas ----------------------------------------------------
+
+    def _make_sched(self) -> SlotScheduler:
+        return ShardedSlotScheduler(self.n_shards, self.slots_per_shard,
+                                    policy=self.admission_policy)
+
+    def _decode_live(self):
+        # the sharded chunk program always takes the live vector (one
+        # trace either mode); whole mode's live flags are maintained by
+        # _arm_slot/eviction just the same
+        return jnp.asarray(self._live)
+
+    def _admit_dispatch(self, slot: int, req):
+        batch = {"tokens": np.asarray(req.tokens, np.int32)[None]}
+        key = jax.random.PRNGKey(req.seed)
+        tok0, keys, self.cache = self._prefill(
+            self.params, batch, self.cache, jnp.int32(slot), key,
+            jnp.float32(req.temperature))
+        owner = slot // self.slots_per_shard
+        return np.asarray(tok0)[owner], np.asarray(keys)[owner]
+
+    # per-shard lane cursors: {shard: cursor}; a missing key = idle lane
+    def _park_lane(self) -> None:
+        self._pf = {}
+
+    def _lane_busy(self) -> bool:
+        return bool(self._pf)
+
+    def _advance_lane(self, sched: SlotScheduler, state: Dict[int, Any],
+                      clock) -> None:
+        """Advance EVERY shard's lane by one chunk in ONE fused dispatch.
+
+        First, idle lanes pick up work: shards with a free slot and no
+        in-flight prompt admit from the shared queue, least-loaded shard
+        first (the policy still ranks WHICH request).  Then one
+        shard_map'd dispatch advances all in-flight lanes together —
+        S prompts mid-prefill cost the same wall-clock as one — and
+        shards whose prompt completed run the finish (first-token sample
+        + pos arm), exactly as the unsharded lane would have.
+        """
+        now = clock()
+        while True:
+            idle = [s for s in range(self.n_shards)
+                    if s not in self._pf and sched.free_on(s)]
+            if not idle:
+                break
+            shard = min(idle, key=lambda s: (sched.load(s), s))
+            adm = sched.next_admission(now, shard=shard)
+            if adm is None:
+                break
+            slot, req = adm
+            self._pf[shard] = self._start_prefill(sched, slot, req, now,
+                                                  shard=shard)
+        if not self._pf:
+            return
+        s_n, pch = self.n_shards, self.p_chunk
+        toks = np.zeros((s_n, pch), np.int32)
+        lslot = np.zeros((s_n,), np.int32)
+        offs = np.zeros((s_n,), np.int32)
+        nval = np.zeros((s_n,), np.int32)
+        act = np.zeros((s_n,), bool)
+        finals: Dict[int, int] = {}
+        for shard, pf in self._pf.items():
+            req, off = pf["req"], pf["offset"]
+            t = len(req.tokens)
+            nv = min(pch, t - off)
+            toks[shard, :nv] = req.tokens[off:off + nv]
+            lslot[shard] = pf["slot"] % self.slots_per_shard
+            offs[shard] = off
+            nval[shard] = nv
+            act[shard] = True
+            if off + nv >= t:
+                finals[shard] = t
+        out, self.cache, self.lane = self._lane_fn(
+            self.params, toks, self.cache, self.lane, jnp.asarray(lslot),
+            jnp.asarray(offs), jnp.asarray(nval), jnp.asarray(act),
+            with_head=bool(finals))
+        for shard, pf in self._pf.items():
+            if act[shard]:
+                pf["offset"] += int(nval[shard])
+        for shard, t in finals.items():
+            pf = self._pf.pop(shard)
+            slot, req = pf["slot"], pf["req"]
+            # out row `shard` is the owner's final-chunk logits
+            tok0, keys, self.cache = self._finish(
+                out[shard:shard + 1], jax.random.PRNGKey(req.seed),
+                jnp.float32(req.temperature), self.cache,
+                jnp.int32(slot), jnp.int32(t))
+            self._arm_slot(slot, req, np.asarray(tok0)[shard],
+                           np.asarray(keys)[shard])
+            sched.mark_decoding(slot)
+            state[slot] = {"admit_time": pf["admit_time"],
+                           "first_token_time": clock(), "out": [],
+                           "prev_n_gen": 0}
+            logger.info("prefill-done uid=%d shard=%d slot=%d prompt=%d "
+                        "ttft=%.3fs", req.uid, shard, slot, t,
+                        state[slot]["first_token_time"] - req.arrival_time)

@@ -1,5 +1,10 @@
 from .rules import (batch_specs, cache_specs, fit_spec, params_specs,
-                    shard_friendly_config, to_shardings)
+                    shard_friendly_config, slot_cache_specs, to_shardings)
+from .shard_map import (SHARD_MAP_WIRE_BACKENDS, mesh_fingerprint,
+                        partial_auto_ok, shard_map_manual,
+                        shard_map_partial_auto)
 
 __all__ = ["params_specs", "cache_specs", "batch_specs", "fit_spec",
-           "shard_friendly_config", "to_shardings"]
+           "shard_friendly_config", "slot_cache_specs", "to_shardings",
+           "shard_map_manual", "shard_map_partial_auto", "partial_auto_ok",
+           "mesh_fingerprint", "SHARD_MAP_WIRE_BACKENDS"]

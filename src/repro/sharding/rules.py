@@ -195,6 +195,7 @@ _CACHE_DIMS = {
 def cache_specs(mesh: Mesh, cache_shapes) -> Any:
     """Serving cache: batch over DP axes; KV-head/channel dims over 'model'."""
     dp = _dp_axes(mesh)
+    has_tp = "model" in mesh.shape   # serving meshes may be data-only
     tp = mesh.shape.get("model", 1)
 
     def spec(path, leaf):
@@ -208,11 +209,36 @@ def cache_specs(mesh: Mesh, cache_shapes) -> Any:
             e[bdim % leaf.ndim] = dp
         elif dp and b % mesh.shape["data"] == 0:
             e[bdim % leaf.ndim] = "data"
-        if leaf.shape[mdim] % tp == 0 and leaf.shape[mdim] >= tp:
+        if has_tp and leaf.shape[mdim] % tp == 0 and leaf.shape[mdim] >= tp:
             e[mdim % leaf.ndim] = "model"
         return P(*e)
 
     return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def slot_cache_specs(cache: Any) -> Dict[str, P]:
+    """Slot-sharded serving specs: the SLOT axis over 'data', nothing else.
+
+    The continuous engine's cache pytree groups leaves by top-level name
+    ("pos" is (B,); every other group stacks layers ahead of the batch
+    axis), and within a group every leaf carries its batch dim at the
+    same position — so one PartitionSpec *prefix* per group is exact.
+    This is the layout contract of ``serving.sharded``: each shard owns
+    ``n_slots / S`` whole slots (K/V rows, ring meta, SSM state, pos),
+    weights stay replicated, and the fully-manual shard_map body sees the
+    plain per-shard continuous-batching problem.  The same dict serves as
+    shard_map in_specs/out_specs (prefix semantics) and, leaf-mapped to
+    NamedShardings, as the device_put layout.
+    """
+    from repro.models.lm import _batch_axis
+
+    specs: Dict[str, P] = {}
+    for name in cache:
+        if name == "pos":
+            specs[name] = P("data")
+        else:
+            specs[name] = P(*((None,) * _batch_axis(name)), "data")
+    return specs
 
 
 def to_shardings(mesh: Mesh, specs):

@@ -88,30 +88,15 @@ def simulate_compress(grads, fmt_name: str = "nxfp8"):
     return jax.tree.map(leaf, grads)
 
 
-# Try the in-graph packed-wire shard_map at all? On CPU builds the SPMD
-# partitioner hard-ABORTS (CHECK `target.IsManualSubgroup() ==
-# sharding().IsManualSubgroup()`, not a catchable exception) on ANY
-# partial-auto shard_map — measured in the ISSUE-2 multipod A/B, DESIGN.md
-# §5 — so dry-run containers must take the simulated wire. Real pods are
-# TPU; first TPU run should flip this on and validate (ROADMAP).
-SHARD_MAP_WIRE_BACKENDS = ("tpu",)
-
-
-def _shard_map_auto(body, mesh, in_specs, out_specs):
-    """Partial-manual shard_map (manual over 'pod', rest automatic) across
-    JAX API generations: new API takes the *manual* axis set via
-    ``axis_names``; older ones take the complement via ``auto``."""
-    try:
-        # AttributeError too: jax<0.5 has no jax.shard_map, and letting it
-        # escape silently demoted capable builds to the simulated wire
-        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, axis_names={"pod"},
-                             check_vma=False)
-    except (TypeError, AttributeError):
-        from jax.experimental.shard_map import shard_map
-        auto = frozenset(n for n in mesh.axis_names if n != "pod")
-        return shard_map(body, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_rep=False, auto=auto)
+# The pod wire is a PARTIAL-AUTO shard_map (manual 'pod' hop, rest GSPMD)
+# — the CPU partitioner hard-aborts on that shape, so dry-run containers
+# must take the simulated wire; the backend gate and the API-generation
+# shim both live in sharding.shard_map (hoisted in ISSUE-5 so the
+# slot-sharded serving engine shares them).  Re-exported here because the
+# multipod A/B and ROADMAP reference compress.SHARD_MAP_WIRE_BACKENDS.
+from repro.sharding.shard_map import (SHARD_MAP_WIRE_BACKENDS,  # noqa: F401
+                                      partial_auto_ok,
+                                      shard_map_partial_auto)
 
 
 def make_pod_grad_fn(grad_fn: Callable, mesh, fmt_name: str = "nxfp8"
@@ -124,7 +109,7 @@ def make_pod_grad_fn(grad_fn: Callable, mesh, fmt_name: str = "nxfp8"
     if "pod" not in mesh.axis_names:
         return grad_fn, "single_pod"
     fmt = get_format(fmt_name)
-    shard_map_ok = jax.default_backend() in SHARD_MAP_WIRE_BACKENDS
+    shard_map_ok = partial_auto_ok()
 
     def body(params, batch):
         # inside the pod-manual region only 'data' is automatic: narrow the
@@ -154,10 +139,11 @@ def make_pod_grad_fn(grad_fn: Callable, mesh, fmt_name: str = "nxfp8"
                 f"packed-wire shard_map disabled on "
                 f"{jax.default_backend()!r} (SHARD_MAP_WIRE_BACKENDS)")
         batch_spec = P("pod")
-        wrapped = _shard_map_auto(
+        wrapped = shard_map_partial_auto(
             body, mesh,
             in_specs=(P(), batch_spec),
-            out_specs=(P(), P()))
+            out_specs=(P(), P()),
+            manual_axes=frozenset({"pod"}))
         return wrapped, "shard_map"
     except Exception:
         def fallback(params, batch):
