@@ -39,8 +39,10 @@ import numpy as np
 from repro.core.qtensor import QuantPolicy
 from repro.models import init_params
 from repro.models.common import ModelConfig
-from repro.serving import (ContinuousEngine, FifoPolicy, Request,
-                           ServeEngine, ShortestPromptFirst, TtftDeadline)
+from repro.serving import (ContinuousEngine, DegradeOverBudget, DropOldest,
+                           Fault, FaultPlan, FifoPolicy, RejectNew, Request,
+                           ServeEngine, ShortestPromptFirst, Status,
+                           TtftDeadline)
 from .common import Csv
 
 # small enough that a decode step's FLOPs sit well under the per-dispatch
@@ -373,14 +375,140 @@ def run_admission_policies(csv: Csv):
         tok_s, results, _ = _serve_engine(
             cfg, params, policy, reqs, n_slots, max_len, chunk,
             prefill_mode="chunked", p_chunk=p_chunk, admission_policy=adm)
-        short = [r.ttft for r in results if len(reqs[r.uid].tokens) == 8]
-        ttft = [r.ttft for r in results]
+        # TtftDeadline EXPIRES hopeless requests now (they report inf
+        # ttft) — aggregate latency over completed results only, and
+        # surface the expiry count so the row stays honest about it
+        ok = [r for r in results if r.ok]
+        short = [r.ttft for r in ok if len(reqs[r.uid].tokens) == 8]
+        ttft = [r.ttft for r in ok]
         derived = (f"tok_s={tok_s:.0f} "
                    f"p99_ttft_ms={np.percentile(ttft, 99) * 1e3:.1f} "
                    f"short_p99_ttft_ms={np.percentile(short, 99) * 1e3:.1f} "
-                   f"n_req={n_req} slots={n_slots}")
+                   f"n_req={n_req} n_ok={len(ok)} slots={n_slots}")
         csv.add(f"serving/admission/{adm.name}", 1e6 / tok_s, derived,
                 unit="us_per_tok")
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance (ISSUE-6): seeded chaos + overload shedding
+# ---------------------------------------------------------------------------
+
+def run_faults(csv: Csv):
+    """Seeded fault injection rides the bench: one serve per fault class.
+
+    A fault-free reference serve pins the expected token streams; each
+    fault class (nan logits, KV bit-flip, delay) then replays the SAME
+    workload with one seeded fault at chunk 2 and the row asserts the
+    ISSUE-6 containment contract before reporting: the victim finishes
+    FAILED with a prefix of its reference stream, every healthy request
+    stays bit-identical, and a pure-latency fault corrupts nothing.
+    Goodput counts completed-OK tokens only — the quantity a shedding/
+    quarantine policy is supposed to protect.
+    """
+    cfg = SERVE_CFG
+    n_slots, chunk, prompt = 2, 4, 8
+    n_req, max_new = 4, (12 if _quick() else 24)
+    max_len = prompt + max_new + 8
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    policy = QuantPolicy(weight_fmt="nxfp4", kv_fmt="nxfp4")
+    rng = np.random.default_rng(3)
+    toks = [rng.integers(0, cfg.vocab, (prompt,)).astype(np.int32)
+            for _ in range(n_req)]
+
+    def serve(plan):
+        # fresh engine per scenario: a KV-flip mutates device state, and
+        # the containment claim is about one serve, not engine reuse
+        # (compiled programs are shared across engines, so this is cheap)
+        eng = ContinuousEngine(cfg, params, policy, n_slots=n_slots,
+                               max_len=max_len, chunk=chunk,
+                               kv_integrity=True)
+        eng.serve([Request(uid=-1, tokens=np.zeros((prompt,), np.int32),
+                           max_new=1)])
+        t0 = time.time()
+        results = eng.serve(
+            [Request(uid=i, tokens=toks[i], max_new=max_new)
+             for i in range(n_req)], fault_plan=plan)
+        return {r.uid: r for r in results}, time.time() - t0
+
+    ref, _ = serve(None)
+    scenarios = {
+        "nan_logits": Fault(kind="nan_logits", chunk=2, uid=1),
+        "kv_flip": Fault(kind="kv_flip", chunk=2, uid=1),
+        "delay": Fault(kind="delay", chunk=2, seconds=0.05),
+    }
+    for kind, fault in scenarios.items():
+        res, wall = serve(FaultPlan(faults=(fault,), seed=7))
+        for uid, r in res.items():
+            want = ref[uid].tokens
+            if kind != "delay" and uid == fault.uid:
+                if r.status != Status.FAILED:
+                    raise AssertionError(
+                        f"{kind}: victim uid={uid} not FAILED ({r.status})")
+                if not np.array_equal(r.tokens, want[:len(r.tokens)]):
+                    raise AssertionError(
+                        f"{kind}: victim partial is not a prefix of the "
+                        f"fault-free stream (uid={uid})")
+            else:
+                if r.status != Status.OK or not np.array_equal(r.tokens,
+                                                               want):
+                    raise AssertionError(
+                        f"{kind}: healthy uid={uid} perturbed "
+                        f"(status={r.status})")
+        good = sum(r.n_generated for r in res.values() if r.ok)
+        n_failed = sum(1 for r in res.values()
+                       if r.status == Status.FAILED)
+        derived = (f"goodput_tok_s={good / wall:.0f} n_failed={n_failed} "
+                   f"n_req={n_req} contained=True")
+        csv.add(f"serving/faults/{kind}", wall / max(good, 1) * 1e6,
+                derived, unit="us_per_tok")
+
+
+def run_overload(csv: Csv):
+    """Burst overload against a bounded queue: one row per shedding policy.
+
+    The whole burst lands before the first chunk completes, so the
+    backlog is maximal and the ``max_queue`` bound must bite.  Each row
+    reports goodput (completed-OK tok/s), shed rate, deadline-hit rate
+    and the degraded count — the observable envelope ISSUE-6 asks for:
+    overload degrades *boundedly* (reject-new / drop-oldest hold the
+    queue at the bound; degrade serves everyone at a capped budget)
+    instead of growing latency without limit.
+    """
+    cfg = SERVE_CFG
+    n_slots, chunk, prompt = 2, 4, 8
+    max_queue, max_new = 2, 16
+    n_req = 8 if _quick() else 12
+    max_len = prompt + max_new + 8
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    policy = QuantPolicy(weight_fmt="nxfp4", kv_fmt="nxfp4")
+    rng = np.random.default_rng(11)
+    toks = [rng.integers(0, cfg.vocab, (prompt,)).astype(np.int32)
+            for _ in range(n_req)]
+
+    for shed in (RejectNew(), DropOldest(),
+                 DegradeOverBudget(max_new_cap=4)):
+        eng = ContinuousEngine(cfg, params, policy, n_slots=n_slots,
+                               max_len=max_len, chunk=chunk,
+                               max_queue=max_queue, shedding=shed)
+        eng.serve([Request(uid=-1, tokens=np.zeros((prompt,), np.int32),
+                           max_new=1)])
+        t0 = time.time()
+        results = eng.serve(
+            [Request(uid=i, tokens=toks[i], max_new=max_new,
+                     arrival_time=i * 1e-4, deadline_s=30.0)
+             for i in range(n_req)])
+        wall = time.time() - t0
+        ok = [r for r in results if r.ok]
+        n_shed = sum(1 for r in results if r.status == Status.SHED)
+        n_deg = sum(1 for r in results if r.degraded and r.ok)
+        goodput = sum(r.n_generated for r in ok) / wall
+        derived = (f"goodput_tok_s={goodput:.0f} "
+                   f"shed_rate={n_shed / n_req:.2f} "
+                   f"deadline_hit_rate={len(ok) / n_req:.2f} "
+                   f"degraded={n_deg} n_req={n_req} "
+                   f"max_queue={max_queue} slots={n_slots}")
+        csv.add(f"serving/overload/{shed.name}", 1e6 / max(goodput, 1e-9),
+                derived, unit="us_per_tok")
 
 
 def run_p_chunk_auto(csv: Csv):
@@ -526,6 +654,8 @@ def run(csv: Csv):
     run_continuous(csv)
     run_longprompt(csv)
     run_admission_policies(csv)
+    run_faults(csv)
+    run_overload(csv)
     run_p_chunk_auto(csv)
     run_sharded(csv)
 

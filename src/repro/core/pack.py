@@ -22,9 +22,11 @@ from __future__ import annotations
 from functools import lru_cache
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-__all__ = ["pack_codes", "unpack_codes", "bytes_per_block", "pack_tile"]
+__all__ = ["pack_codes", "unpack_codes", "bytes_per_block", "pack_tile",
+           "byte_fold"]
 
 
 def bytes_per_block(block_size: int, bits: int) -> int:
@@ -101,6 +103,32 @@ def unpack_codes(packed, bits: int, block_size: int):
     word = lo_b | (hi_b << 8)
     mask = (1 << bits) - 1
     return ((word >> jnp.asarray(off)) & mask).astype(jnp.uint8)
+
+
+def byte_fold(x, keep_dims: int):
+    """Position-weighted integrity fold: uint32 canary over trailing dims.
+
+    Flattens every axis after the first ``keep_dims`` and reduces it to
+    one uint32 per leading index: ``sum_j x[j] * (2j + 1) mod 2^32``.
+    The weights are odd, so a single corrupted element changes the fold
+    by ``delta * odd != 0 (mod 2^32)`` — any one-element flip (and any
+    single byte flip of a packed buffer) is always detected, and the
+    positional weighting catches value swaps a plain sum would miss.
+    Floats are bitcast to same-width unsigned ints first, so the fold is
+    a statement about BITS, not values (NaN-safe, -0.0 != +0.0).
+
+    This is the checksum half of the round-trip canaries the codec tests
+    run (``_validateCode`` spirit): cheap enough to sit on a serving
+    chunk boundary, exact enough to make corruption loud.
+    """
+    lead = x.shape[:keep_dims]
+    flat = x.reshape(lead + (-1,))
+    if jnp.issubdtype(flat.dtype, jnp.floating):
+        bits = {2: jnp.uint16, 4: jnp.uint32}[flat.dtype.itemsize]
+        flat = jax.lax.bitcast_convert_type(flat, bits)
+    flat = flat.astype(jnp.uint32)
+    w = 2 * jnp.arange(flat.shape[-1], dtype=jnp.uint32) + 1
+    return jnp.sum(flat * w, axis=-1, dtype=jnp.uint32)
 
 
 def pack_codes_scatter(codes, bits: int):

@@ -27,10 +27,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import get_format
-from repro.core.pack import bytes_per_block
+from repro.core.pack import byte_fold, bytes_per_block
 from repro.core.qtensor import QTensor
 from repro.kernels.ops import decode_attention, quantize_qtensor
 from .common import ModelConfig
+
+# the attention-cache leaves covered by the per-slot integrity canary
+# (dense bf16 or NxFP packed+meta; SSM state is excluded — it integrates
+# every step, so it has no immutable prefix to checksum)
+_KV_LEAVES = ("k", "v", "k_packed", "k_meta", "v_packed", "v_meta")
 
 
 def attn_cache_init(cfg: ModelConfig, n_layers: int, batch: int,
@@ -196,6 +201,43 @@ def write_token(cfg: ModelConfig, layer_cache, k1, v1, pos,
             "k_meta": upd(layer_cache["k_meta"], km),
             "v_packed": upd(layer_cache["v_packed"], vp),
             "v_meta": upd(layer_cache["v_meta"], vm)}
+
+
+def kv_slot_checksum(cfg: ModelConfig, cache, upto):
+    """(B,) uint32 canary over each slot's KV rows ``[0, upto[b])``.
+
+    The failure-containment primitive (DESIGN.md §11): decode APPENDS at
+    ``pos`` and never rewrites earlier rows (outside an SWA ring wrap),
+    so a slot's prefix rows are immutable across a decode chunk — a
+    checksum computed before the chunk must match after it, or the slot's
+    cache was corrupted.  The fold is ``core.pack.byte_fold`` per
+    (layer, slot, row) — bit-exact over packed uint8/uint16 buffers and
+    bitcast bf16 alike — combined with odd per-row weights, so a flipped
+    byte OR two swapped rows both change the canary.
+
+    ``upto`` is (B,) int32; slots with ``upto[b] == 0`` contribute the
+    trivially stable 0 (mid-prefill and parked slots).  Caches without
+    attention KV leaves (pure-SSM families) return zeros — integrity
+    there is vacuous, not checked.  Runs unchanged per shard under the
+    slot-sharded manual shard_map (no cross-slot terms).
+    """
+    b = cache["pos"].shape[0]
+    total = jnp.zeros((b,), jnp.uint32)
+    layers = cache.get("layers")
+    if layers is None:
+        return total
+    upto = jnp.asarray(upto, jnp.int32)
+    for name in _KV_LEAVES:
+        leaf = layers.get(name)
+        if leaf is None:
+            continue
+        f = byte_fold(leaf, 3)                          # (L, B, S)
+        s = leaf.shape[2]
+        rw = 2 * jnp.arange(s, dtype=jnp.uint32) + 1
+        mask = (jnp.arange(s)[None, :] < upto[:, None]).astype(jnp.uint32)
+        total = total + jnp.sum(f * rw[None, None, :] * mask[None],
+                                axis=(0, 2), dtype=jnp.uint32)
+    return total
 
 
 def attend_decode(cfg: ModelConfig, layer_cache, q, pos,

@@ -405,7 +405,8 @@ def decode_step(cfg: ModelConfig, params: Params, tokens, cache,
 
 def decode_loop(cfg: ModelConfig, params: Params, tok, cache, n_steps: int,
                 kv_fmt: Optional[str], sample_fn, key,
-                split_fn=jax.random.split, live=None):
+                split_fn=jax.random.split, live=None, logits_fn=None,
+                probe_fn=None):
     """Run ``n_steps`` decode steps as ONE on-device ``lax.scan``.
 
     The serving hot loop (DESIGN.md §7): the KV cache, logits and sampled
@@ -424,21 +425,34 @@ def decode_loop(cfg: ModelConfig, params: Params, tok, cache, n_steps: int,
     each slot's stream matches the solo engine's chain for its seed;
     ``split_fn(key) -> (next_key, subkey)``.
 
-    Returns ``(tokens (B, n_steps), tok, cache, key)`` — the emitted
-    tokens start with the entering token; the returned ``tok`` enters the
-    next chunk.
+    ``logits_fn`` (optional) rewrites each step's logits before sampling
+    — the serving fault-injection hook (an identity-by-default ``where``
+    keeps the fault-free path bit-identical).  ``probe_fn`` (optional)
+    maps each step's post-``logits_fn`` logits to a per-step auxiliary
+    (e.g. a per-slot ``isfinite`` health sentinel); when set, the return
+    grows a fifth element with the per-step probes stacked on axis 0.
+
+    Returns ``(tokens (B, n_steps), tok, cache, key[, aux])`` — the
+    emitted tokens start with the entering token; the returned ``tok``
+    enters the next chunk.
     """
     def step(carry, _):
         t, c, k = carry
         k, sub = split_fn(k)
         logits, c = decode_step(cfg, params, t[:, None], c, kv_fmt,
                                 live=live)
+        if logits_fn is not None:
+            logits = logits_fn(logits)
+        out = t if probe_fn is None else (t, probe_fn(logits))
         nxt = sample_fn(logits, sub).astype(jnp.int32)
-        return (nxt, c, k), t
+        return (nxt, c, k), out
 
-    (tok, cache, key), toks = jax.lax.scan(
+    (tok, cache, key), out = jax.lax.scan(
         step, (tok, cache, key), None, length=n_steps)
-    return toks.T, tok, cache, key
+    if probe_fn is None:
+        return out.T, tok, cache, key
+    toks, aux = out
+    return toks.T, tok, cache, key, aux
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,

@@ -1,10 +1,16 @@
 from .engine import ServeEngine, GenerationResult
-from .scheduler import (AdmissionPolicy, ContinuousEngine, FifoPolicy,
-                        Request, RequestResult, ShardedSlotScheduler,
-                        ShortestPromptFirst, SlotScheduler, TtftDeadline)
+from .events import emit, parse_event
+from .faults import Fault, FaultPlan
+from .scheduler import (AdmissionPolicy, ContinuousEngine, DegradeOverBudget,
+                        DropOldest, FifoPolicy, RejectNew, Request,
+                        RequestResult, ShardedSlotScheduler, SheddingPolicy,
+                        ShortestPromptFirst, SlotScheduler, Status,
+                        TtftDeadline)
 from .sharded import ShardedContinuousEngine
 
 __all__ = ["ServeEngine", "GenerationResult", "ContinuousEngine",
-           "ShardedContinuousEngine", "Request", "RequestResult",
+           "ShardedContinuousEngine", "Request", "RequestResult", "Status",
            "SlotScheduler", "ShardedSlotScheduler", "AdmissionPolicy",
-           "FifoPolicy", "ShortestPromptFirst", "TtftDeadline"]
+           "FifoPolicy", "ShortestPromptFirst", "TtftDeadline",
+           "SheddingPolicy", "RejectNew", "DropOldest", "DegradeOverBudget",
+           "Fault", "FaultPlan", "emit", "parse_event"]

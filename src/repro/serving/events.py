@@ -1,0 +1,46 @@
+"""Structured JSONL serving events on the standard ``repro.serving`` loggers.
+
+Scheduler/engine lifecycle transitions — admit, prefill start/done,
+finish, shed, expire, cancel, degrade, quarantine, requeue, fault — are
+logged as ONE ``json.dumps`` object per record, so a serving run (and in
+particular a fault-injection run, DESIGN.md §11) leaves a machine-
+parseable postmortem trail behind the ordinary logging tree: handlers,
+filters and levels keep working unchanged, and human-oriented messages
+(compile warnings, autotune summaries) coexist on the same loggers.
+``parse_event`` is the read side: feed it captured log messages and it
+returns the event dicts, skipping the human text.
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+__all__ = ["emit", "parse_event"]
+
+
+def emit(logger, event: str, **fields) -> None:
+    """Log one structured JSONL event record at INFO on ``logger``.
+
+    The record is ``{"event": <event>, **fields}`` serialized as a single
+    JSON object (sorted keys, None-valued fields dropped — absent beats
+    null for grep-ability).  Numpy scalars coerce through ``float``.
+    """
+    rec = {"event": event}
+    rec.update({k: v for k, v in fields.items() if v is not None})
+    logger.info("%s", json.dumps(rec, sort_keys=True, default=float))
+
+
+def parse_event(message: str) -> Optional[dict]:
+    """Parse one logged message back into its event dict.
+
+    Returns None for anything that is not a JSONL event record — the
+    serving loggers intentionally carry human-oriented text too, so the
+    postmortem reader filters rather than asserts.
+    """
+    if not message.lstrip().startswith("{"):
+        return None
+    try:
+        obj = json.loads(message)
+    except ValueError:
+        return None
+    return obj if isinstance(obj, dict) and "event" in obj else None

@@ -64,9 +64,32 @@ from repro.kernels.ops import quantize_qtensor
 from repro.models import (decode_loop, init_cache, init_lane, prefill_chunk,
                           prefill_into_slot, reset_slot)
 from repro.models.common import ModelConfig, gated_update_slice
+from repro.models.kvcache import kv_slot_checksum
 from .engine import cached_program, mask_chunk_emissions
+from .events import emit
+from .faults import flip_kv_bytes
 
 logger = logging.getLogger("repro.serving.scheduler")
+
+
+class Status:
+    """Terminal request statuses (DESIGN.md §11) — plain strings so they
+    serialize into the JSONL event stream and bench CSVs unchanged.
+
+    Every submitted request gets EXACTLY ONE result with one of these:
+    OK (ran to completion), DEADLINE_EXPIRED (its ``deadline_s`` elapsed —
+    queued requests are dropped, decoding ones return their partial
+    output), CANCELLED (``ContinuousEngine.cancel``, same partial-output
+    semantics), SHED (bounded-queue backpressure rejected it unstarted),
+    FAILED (its slot tripped a containment check and the retry budget was
+    exhausted; tokens are the pre-fault prefix).
+    """
+
+    OK = "OK"
+    DEADLINE_EXPIRED = "DEADLINE_EXPIRED"
+    CANCELLED = "CANCELLED"
+    SHED = "SHED"
+    FAILED = "FAILED"
 
 
 @dataclasses.dataclass
@@ -78,6 +101,11 @@ class Request:
     arrival has passed, which is how benchmarks replay Poisson traffic.
     ``seed`` drives this request's private sampling chain — a sampled
     request reproduces ``ServeEngine(rng_seed=seed)`` serving it alone.
+    ``deadline_s`` is an END-TO-END budget from arrival: once exceeded
+    the request is evicted at the next chunk boundary with whatever it
+    generated so far (DESIGN.md §11).  ``retries`` is the quarantine
+    budget — how many times a containment trip may requeue this request
+    instead of failing it.
     """
     uid: int
     tokens: np.ndarray                  # (T,) int32 prompt
@@ -86,16 +114,30 @@ class Request:
     stop_token: Optional[int] = None
     arrival_time: float = 0.0
     seed: int = 0
+    deadline_s: Optional[float] = None
+    retries: int = 0
 
 
 @dataclasses.dataclass
 class RequestResult:
+    """Terminal record for one request.  ``status`` says HOW it ended
+    (``Status``); non-OK results still carry the partial ``tokens``
+    generated before eviction (empty for SHED / queued expiry).
+    ``degraded`` flags requests served under a shedding-policy degrade
+    tier (capped ``max_new`` / forced greedy)."""
+
     uid: int
     tokens: np.ndarray                  # (n_generated,) int32
     n_generated: int
     queue_delay: float                  # arrival -> admission (s)
     ttft: float                         # arrival -> first token (s)
     decode_seconds: float               # admission -> completion (s)
+    status: str = Status.OK
+    degraded: bool = False
+
+    @property
+    def ok(self) -> bool:
+        return self.status == Status.OK
 
     @property
     def decode_tok_s(self) -> float:
@@ -119,6 +161,17 @@ class AdmissionPolicy:
 
     def select(self, queue: Sequence[Request], now: float) -> Optional[int]:
         raise NotImplementedError
+
+    def expired(self, queue: Sequence[Request], now: float) -> List[int]:
+        """Indices of arrived requests this policy considers UNSERVABLE.
+
+        The scheduler evicts them with ``Status.DEADLINE_EXPIRED``
+        instead of leaving them to rot at the back of the ranking (the
+        pre-fix ``TtftDeadline`` bug: negative-slack requests were still
+        admitted — burning a slot on a request that already missed its
+        deadline).  Default: nothing expires.
+        """
+        return []
 
 
 class FifoPolicy(AdmissionPolicy):
@@ -159,6 +212,12 @@ class TtftDeadline(AdmissionPolicy):
     request spends spare time where it exists instead of FIFO's
     arrival-order head-of-line blocking: an old long prompt and a fresh
     short one are ranked by who is closest to blowing their deadline.
+
+    Requests whose slack has gone NEGATIVE are never selected — their
+    deadline is already unmeetable, and admitting one spends a slot (and
+    a prefill) producing a first token that is late by construction.
+    They surface through ``expired`` so the scheduler can evict them
+    with an explicit ``DEADLINE_EXPIRED`` status instead.
     """
 
     name = "ttft-deadline"
@@ -168,11 +227,98 @@ class TtftDeadline(AdmissionPolicy):
         self.deadline_s = deadline_s
         self.prefill_s_per_tok = prefill_s_per_tok
 
+    def _slack(self, r: Request, now: float) -> float:
+        return (r.arrival_time + self.deadline_s - now
+                - len(r.tokens) * self.prefill_s_per_tok)
+
     def select(self, queue, now):
-        arrived = [(r.arrival_time + self.deadline_s - now
-                    - len(r.tokens) * self.prefill_s_per_tok, i)
-                   for i, r in enumerate(queue) if r.arrival_time <= now]
+        arrived = [(self._slack(r, now), i) for i, r in enumerate(queue)
+                   if r.arrival_time <= now and self._slack(r, now) >= 0.0]
         return min(arrived)[1] if arrived else None
+
+    def expired(self, queue, now):
+        return [i for i, r in enumerate(queue)
+                if r.arrival_time <= now and self._slack(r, now) < 0.0]
+
+
+# ---------------------------------------------------------------------------
+# load shedding: WHAT gives way when the arrived queue exceeds max_queue?
+# ---------------------------------------------------------------------------
+
+class SheddingPolicy:
+    """Backpressure policy for a bounded admission queue (DESIGN.md §11).
+
+    When the ARRIVED portion of the queue (future arrivals don't count —
+    they aren't load yet) exceeds ``SlotScheduler.max_queue``,
+    ``over_budget`` decides what gives: it returns ``(shed, degrade)``
+    where ``shed`` is queue indices to evict with ``Status.SHED`` and
+    ``degrade`` is ``(index, max_new_cap, force_greedy)`` triples to keep
+    serving under a cheaper tier.  ``arrived`` is pre-sorted oldest
+    first, so slicing its ends is arrival-order shedding.
+    """
+
+    name = "reject-new"
+
+    def over_budget(self, sched: "SlotScheduler", arrived: List[int],
+                    n_over: int, now: float
+                    ) -> Tuple[List[int], List[Tuple[int, int, bool]]]:
+        raise NotImplementedError
+
+
+class RejectNew(SheddingPolicy):
+    """Shed the NEWEST over-budget arrivals (default).  The queue keeps
+    its oldest waiters — nothing already enqueued loses its place, and a
+    fresh burst bounces off a full queue the way a 503 would."""
+
+    name = "reject-new"
+
+    def over_budget(self, sched, arrived, n_over, now):
+        return arrived[-n_over:], []
+
+
+class DropOldest(SheddingPolicy):
+    """Shed the OLDEST arrivals.  Under sustained overload the oldest
+    waiters are the ones most likely to have blown their deadline anyway;
+    dropping them keeps observed queue delay bounded for the survivors
+    (tail-latency-biased shedding)."""
+
+    name = "drop-oldest"
+
+    def over_budget(self, sched, arrived, n_over, now):
+        return arrived[:n_over], []
+
+
+class DegradeOverBudget(SheddingPolicy):
+    """Serve over-budget arrivals under a DEGRADED tier instead of
+    shedding them: their ``max_new`` is capped at ``max_new_cap`` (and
+    sampling forced greedy when ``force_greedy``) at admission, trading
+    answer length for admission under load.  ``hard_cap`` (optional,
+    counted in arrived requests) bounds the degraded backlog itself —
+    beyond it the newest arrivals are shed outright, so overload stays
+    bounded even when traffic outruns the degraded tier.
+
+    Results served under this tier carry ``degraded=True``.  A per-slot
+    nxfp4-KV degrade tier is the ROADMAP follow-up; capped ``max_new``
+    is the degrade axis this policy implements.
+    """
+
+    name = "degrade"
+
+    def __init__(self, max_new_cap: int = 8, force_greedy: bool = True,
+                 hard_cap: Optional[int] = None):
+        self.max_new_cap = max_new_cap
+        self.force_greedy = force_greedy
+        self.hard_cap = hard_cap
+
+    def over_budget(self, sched, arrived, n_over, now):
+        shed: List[int] = []
+        if self.hard_cap is not None and len(arrived) > self.hard_cap:
+            shed = arrived[self.hard_cap:]
+            arrived = arrived[:self.hard_cap]
+            n_over = max(n_over - len(shed), 0)
+        degrade = [(i, self.max_new_cap, self.force_greedy)
+                   for i in (arrived[-n_over:] if n_over else [])]
+        return shed, degrade
 
 
 # ---------------------------------------------------------------------------
@@ -191,18 +337,48 @@ class SlotScheduler:
     the chunked lane is still feeding their prompt, DECODING once their
     first token exists — so observers (and the engine's decode loop) can
     tell a mid-prefill slot from a live one.
+
+    With ``max_queue`` set, the ARRIVED queue is bounded: each
+    ``enforce_bounds`` call hands the overflow to the ``shedding``
+    policy (default ``RejectNew``), which sheds or degrades it —
+    backpressure is explicit and observable, never an unbounded backlog.
+    ``expire_queued`` evicts queued requests whose per-request deadline
+    (or the admission policy's own deadline model) has already passed.
     """
 
-    def __init__(self, n_slots: int, policy: Optional[AdmissionPolicy] = None):
+    def __init__(self, n_slots: int, policy: Optional[AdmissionPolicy] = None,
+                 max_queue: Optional[int] = None,
+                 shedding: Optional[SheddingPolicy] = None):
         self.n_slots = n_slots
         self.policy = policy or FifoPolicy()
+        self.max_queue = max_queue
+        self.shedding = shedding or RejectNew()
         self.queue: List[Request] = []
         self.free: List[int] = list(range(n_slots))
         self.active: Dict[int, Request] = {}
         self.phase: Dict[int, str] = {}
+        # uid -> (max_new_cap, force_greedy): degrade-tier markers applied
+        # at admission time; popped into RequestResult.degraded at finish
+        self.degraded: Dict[int, Tuple[Optional[int], bool]] = {}
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    def _take(self, idx: int, slot: int) -> Tuple[int, Request]:
+        """Move queue[idx] into ``slot``, applying any degrade marker."""
+        self.free.remove(slot)
+        req = self.queue.pop(idx)
+        mark = self.degraded.get(req.uid)
+        if mark is not None:
+            cap, greedy = mark
+            if cap is not None:
+                req = dataclasses.replace(req,
+                                          max_new=min(req.max_new, cap))
+            if greedy:
+                req = dataclasses.replace(req, temperature=0.0)
+        self.active[slot] = req
+        self.phase[slot] = DECODING
+        return slot, req
 
     def next_admission(self, now: float) -> Optional[Tuple[int, Request]]:
         """Pop (slot, request) if a slot is free and the policy picks one."""
@@ -211,11 +387,54 @@ class SlotScheduler:
         idx = self.policy.select(self.queue, now)
         if idx is None:
             return None
-        slot = self.free.pop(0)
-        req = self.queue.pop(idx)
-        self.active[slot] = req
-        self.phase[slot] = DECODING
-        return slot, req
+        return self._take(idx, self.free[0])
+
+    def pop_queued(self, uid: int) -> Optional[Request]:
+        """Remove and return the queued request with ``uid`` (else None)."""
+        for i, r in enumerate(self.queue):
+            if r.uid == uid:
+                return self.queue.pop(i)
+        return None
+
+    def expire_queued(self, now: float) -> List[Request]:
+        """Pop arrived queued requests whose deadline already passed."""
+        idx = {i for i, r in enumerate(self.queue)
+               if r.deadline_s is not None and r.arrival_time <= now
+               and now - r.arrival_time > r.deadline_s}
+        idx.update(self.policy.expired(self.queue, now))
+        return [self.queue.pop(i) for i in sorted(idx, reverse=True)]
+
+    def enforce_bounds(self, now: float) -> List[Request]:
+        """Apply the shedding policy; returns the requests shed (if any).
+
+        The bound applies to the BACKLOG: arrived waiters beyond what
+        currently-free slots can absorb immediately (the sweep runs
+        before admission each iteration, so without the ``free`` credit
+        an initial burst would shed requests an idle slot was about to
+        serve).  Degrade markers are recorded here (and logged once per
+        uid); they take effect when ``_take`` admits the marked request.
+        """
+        if self.max_queue is None:
+            return []
+        arrived = sorted((i for i, r in enumerate(self.queue)
+                          if r.arrival_time <= now),
+                         key=lambda i: (self.queue[i].arrival_time, i))
+        n_over = len(arrived) - self.max_queue - len(self.free)
+        if n_over <= 0:
+            return []
+        shed_idx, degrades = self.shedding.over_budget(self, arrived,
+                                                       n_over, now)
+        for i, cap, greedy in degrades:
+            uid = self.queue[i].uid
+            if uid not in self.degraded:
+                self.degraded[uid] = (cap, greedy)
+                emit(logger, "degrade", uid=uid, max_new_cap=cap,
+                     greedy=greedy, policy=self.shedding.name)
+        shed = [self.queue.pop(i) for i in sorted(set(shed_idx),
+                                                  reverse=True)]
+        for r in shed:
+            self.degraded.pop(r.uid, None)
+        return shed
 
     def mark_prefilling(self, slot: int) -> None:
         self.phase[slot] = PREFILLING
@@ -257,8 +476,8 @@ class ShardedSlotScheduler(SlotScheduler):
     """
 
     def __init__(self, n_shards: int, slots_per_shard: int,
-                 policy: Optional[AdmissionPolicy] = None):
-        super().__init__(n_shards * slots_per_shard, policy)
+                 policy: Optional[AdmissionPolicy] = None, **kw):
+        super().__init__(n_shards * slots_per_shard, policy, **kw)
         self.n_shards = n_shards
         self.slots_per_shard = slots_per_shard
 
@@ -291,12 +510,7 @@ class ShardedSlotScheduler(SlotScheduler):
         idx = self.policy.select(self.queue, now)
         if idx is None:
             return None
-        slot = free[0]
-        self.free.remove(slot)
-        req = self.queue.pop(idx)
-        self.active[slot] = req
-        self.phase[slot] = DECODING
-        return slot, req
+        return self._take(idx, free[0])
 
 
 class ContinuousEngine:
@@ -327,7 +541,10 @@ class ContinuousEngine:
                  warn_compile: bool = True, prefill_mode: str = "whole",
                  p_chunk=32,
                  admission_policy: Optional[AdmissionPolicy] = None,
-                 p_chunk_candidates: Sequence[int] = (16, 32, 64, 128)):
+                 p_chunk_candidates: Sequence[int] = (16, 32, 64, 128),
+                 kv_integrity: bool = False,
+                 max_queue: Optional[int] = None,
+                 shedding: Optional[SheddingPolicy] = None):
         self.cfg = cfg
         self.policy = policy
         self.n_slots = n_slots
@@ -341,6 +558,18 @@ class ContinuousEngine:
         self.admission_policy = admission_policy
         assert prefill_mode in ("whole", "chunked"), prefill_mode
         self.prefill_mode = prefill_mode
+        if kv_integrity and cfg.family == "ssm":
+            raise ValueError("kv_integrity checksums attention KV caches; "
+                             "family='ssm' has none")
+        self.kv_integrity = kv_integrity
+        self.max_queue = max_queue
+        self.shedding = shedding
+        self._cancel_uids: set = set()
+        self._fault_plan = None
+        self._chunk_idx = 0
+        self._kv_armed = np.zeros((n_slots,), bool)
+        self._kv_sum = np.zeros((n_slots,), np.uint32)
+        self._kv_upto = np.zeros((n_slots,), np.int32)
         # compile-cache keys carry the mesh identity (None = unsharded):
         # a sharded and an unsharded engine on identical (cfg, kv, ...)
         # must never hand each other executables (ISSUE-5)
@@ -416,6 +645,10 @@ class ContinuousEngine:
             lambda: jax.jit(
                 functools.partial(self._chunk_fn, cfg=cfg, kv_fmt=kv),
                 static_argnames=("n_steps", "greedy")))
+        if self.kv_integrity:
+            self._kv_check = cached_program(
+                ("kv_check", cfg, kv, mk),
+                lambda: jax.jit(functools.partial(kv_slot_checksum, cfg)))
 
     def _build_lane(self) -> None:
         cfg, kv, mk = self.cfg, self._kv, self._mesh_key
@@ -486,6 +719,7 @@ class ContinuousEngine:
             params, zi, cache, jnp.zeros((b, 2), jnp.uint32),
             jnp.ones((b,), bool), zi, zi, jnp.zeros((b,), jnp.float32),
             jnp.full((b,), -1, jnp.int32), jnp.zeros((b,), bool),
+            jnp.zeros((b,), bool),
             n_steps=self.chunk, greedy=True))
         self.p_chunk_sweep: Dict[int, float] = {}
         for p in cands:
@@ -582,8 +816,8 @@ class ContinuousEngine:
 
     @staticmethod
     def _chunk_fn(params, tok, cache, keys, done, n_gen, max_new,
-                  temperature, stop, live, *, cfg, kv_fmt, n_steps: int,
-                  greedy: bool):
+                  temperature, stop, live, poison, *, cfg, kv_fmt,
+                  n_steps: int, greedy: bool):
         """One dispatch = ``n_steps`` ragged decode steps, fully on device.
 
         Same emission semantics as ``ServeEngine._chunk_fn`` plus a
@@ -600,6 +834,17 @@ class ContinuousEngine:
         ``live`` (B,) bool freezes not-live slots' cache state (position,
         K/V writes, SSM integration): mid-chunked-prefill and parked
         slots step through the batch without clobbering lane-owned rows.
+
+        Robustness plumbing (DESIGN.md §11): ``poison`` (B,) bool is the
+        fault-injection hook — marked slots' logits become NaN inside
+        the scan (the all-False default is a no-op ``where``, bitwise
+        transparent).  The extra ``finite`` output is the containment
+        SENTINEL: per-slot AND of ``isfinite`` over every step's logits,
+        scanned alongside decode at no extra dispatch — a NaN/Inf at ANY
+        step trips it even if later steps look sane again.  Rows are
+        independent (attention and MoE-decode routing are per-slot), so
+        a poisoned slot cannot perturb its neighbors — which is what
+        makes quarantine-and-continue sound.
         """
         def split_fn(ks):
             if greedy:          # keys untouched; sampled slots don't exist
@@ -616,12 +861,19 @@ class ContinuousEngine:
                                                  logits / safe[:, None])
             return jnp.where(temperature > 0, s, g)
 
-        toks, tok, cache, keys = decode_loop(
+        def inject(logits):
+            return jnp.where(poison[:, None], jnp.float32(jnp.nan), logits)
+
+        def probe(logits):
+            return jnp.all(jnp.isfinite(logits), axis=-1)
+
+        toks, tok, cache, keys, aux = decode_loop(
             cfg, params, tok, cache, n_steps, kv_fmt, sample, keys,
-            split_fn=split_fn, live=live)
+            split_fn=split_fn, live=live, logits_fn=inject, probe_fn=probe)
+        finite = jnp.all(aux, axis=0)
         emitted, n_gen, done = mask_chunk_emissions(toks, done, n_gen,
                                                     stop, max_new)
-        return emitted, tok, cache, keys, done, n_gen
+        return emitted, tok, cache, keys, done, n_gen, finite
 
     # -- host loop ----------------------------------------------------------
 
@@ -655,9 +907,9 @@ class ContinuousEngine:
         tok0, key = self._admit_dispatch(slot, req)
         self._arm_slot(slot, req, tok0, key)
         admit_done = clock()
-        logger.info("admit uid=%d slot=%d prompt=%d max_new=%d "
-                    "queue_delay=%.3fs", req.uid, slot, t, req.max_new,
-                    now - req.arrival_time)
+        emit(logger, "admit", uid=req.uid, slot=slot,
+             shard=self._shard_of(slot), prompt=t, max_new=req.max_new,
+             queue_delay=now - req.arrival_time)
         return {"admit_time": now, "first_token_time": admit_done,
                 "out": [], "prev_n_gen": 0}
 
@@ -690,8 +942,23 @@ class ContinuousEngine:
             return None
         return jnp.asarray(self._live)
 
+    def _shard_of(self, slot: int) -> Optional[int]:
+        """Owning shard of ``slot`` for event records (unsharded: None)."""
+        return None
+
+    def _drop_lane_cursor(self, slot: int) -> None:
+        """Forget any in-flight lane cursor feeding ``slot`` (abort path).
+
+        The lane scratch itself needs no cleanup: a later prefill writes
+        (and only ever reads) rows below its own cursor.
+        """
+        if self._pf is not None and self._pf["slot"] == slot:
+            self._pf = None
+
     def _make_sched(self) -> SlotScheduler:
-        return SlotScheduler(self.n_slots, policy=self.admission_policy)
+        return SlotScheduler(self.n_slots, policy=self.admission_policy,
+                             max_queue=self.max_queue,
+                             shedding=self.shedding)
 
     def _start_prefill(self, sched: SlotScheduler, slot: int, req: Request,
                        now: float, shard=None) -> Dict[str, Any]:
@@ -707,11 +974,10 @@ class ContinuousEngine:
         self._done[slot] = True
         self._temp[slot] = 0.0
         self._stop[slot] = -1
-        logger.info("prefill-start uid=%d%s slot=%d prompt=%d chunks=%d "
-                    "queue_delay=%.3fs", req.uid,
-                    "" if shard is None else f" shard={shard}", slot,
-                    len(req.tokens), -(-len(req.tokens) // self.p_chunk),
-                    now - req.arrival_time)
+        emit(logger, "prefill-start", uid=req.uid, shard=shard, slot=slot,
+             prompt=len(req.tokens),
+             chunks=-(-len(req.tokens) // self.p_chunk),
+             queue_delay=now - req.arrival_time)
         return {"slot": slot, "req": req, "offset": 0, "admit_time": now}
 
     def _advance_lane(self, sched: SlotScheduler, state: Dict[int, Any],
@@ -752,23 +1018,275 @@ class ContinuousEngine:
         state[slot] = {"admit_time": pf["admit_time"],
                        "first_token_time": clock(), "out": [],
                        "prev_n_gen": 0}
-        logger.info("prefill-done uid=%d slot=%d prompt=%d ttft=%.3fs",
-                    req.uid, slot, t,
-                    state[slot]["first_token_time"] - req.arrival_time)
+        emit(logger, "prefill-done", uid=req.uid, slot=slot, prompt=t,
+             ttft=state[slot]["first_token_time"] - req.arrival_time)
         self._pf = None
 
-    def serve(self, requests: List[Request],
-              progress_cb=None) -> List[RequestResult]:
+    # -- request lifecycle: cancellation, deadlines, shedding, quarantine ----
+
+    _EVENT_OF = {Status.CANCELLED: "cancel",
+                 Status.DEADLINE_EXPIRED: "expire",
+                 Status.SHED: "shed"}
+
+    def cancel(self, uid: int) -> None:
+        """Request cancellation of ``uid`` in the current ``serve`` run.
+
+        Honored at the next chunk boundary: a queued request is dropped,
+        a decoding one completes early with its partial output, both with
+        ``Status.CANCELLED``.  Unknown/finished uids are a no-op.  Safe
+        to call from a ``progress_cb`` or another thread (set-add/pop on
+        a plain set; no token is ever half-emitted — eviction happens
+        only between chunks).
+        """
+        self._cancel_uids.add(uid)
+
+    def _unadmitted(self, sched: SlotScheduler, req: Request, status: str,
+                    now: float, results: List[RequestResult]) -> None:
+        """Terminal result for a request that never produced a token."""
+        results.append(RequestResult(
+            uid=req.uid, tokens=np.zeros((0,), np.int32), n_generated=0,
+            queue_delay=now - req.arrival_time, ttft=float("inf"),
+            decode_seconds=0.0, status=status,
+            degraded=sched.degraded.pop(req.uid, None) is not None))
+        emit(logger, self._EVENT_OF[status], uid=req.uid, status=status,
+             queue_delay=now - req.arrival_time)
+
+    def _finish_slot(self, sched: SlotScheduler, state: Dict[int, Any],
+                     slot: int, status: str, now: float,
+                     results: List[RequestResult]) -> None:
+        """Evict a DECODING slot with its (possibly partial) output.
+
+        The one slot-retirement path: scheduler release, device-side slot
+        reset (park pos, zero SSM state), host flag parking, result
+        construction and the ``finish`` event all live here so OK
+        completion and deadline/cancel eviction cannot drift apart.
+        """
+        req = sched.release(slot)
+        st = state.pop(slot, None)
+        self.cache = self._reset(self.cache, jnp.int32(slot))
+        self._live[slot] = False
+        self._done[slot] = True
+        self._temp[slot] = 0.0   # parked slots don't hold the
+        self._stop[slot] = -1    # chunk in sampled mode
+        self._kv_armed[slot] = False
+        out = st["out"] if st else []
+        admit = st["admit_time"] if st else now
+        ttft = (st["first_token_time"] - req.arrival_time) if st \
+            else float("inf")
+        res = RequestResult(
+            uid=req.uid, tokens=np.asarray(out, np.int32),
+            n_generated=len(out), queue_delay=admit - req.arrival_time,
+            ttft=ttft, decode_seconds=now - admit, status=status,
+            degraded=sched.degraded.pop(req.uid, None) is not None)
+        results.append(res)
+        emit(logger, "finish", uid=req.uid, slot=slot,
+             shard=self._shard_of(slot), status=status, n=len(out),
+             ttft=ttft, tok_s=res.decode_tok_s)
+
+    def _abort_prefill(self, sched: SlotScheduler, slot: int) -> Request:
+        """Tear down a PREFILLING slot (cancel/deadline mid-lane)."""
+        self._drop_lane_cursor(slot)
+        req = sched.release(slot)
+        self.cache = self._reset(self.cache, jnp.int32(slot))
+        self._live[slot] = False
+        self._done[slot] = True
+        self._temp[slot] = 0.0
+        self._stop[slot] = -1
+        self._kv_armed[slot] = False
+        return req
+
+    def _lifecycle(self, sched: SlotScheduler, state: Dict[int, Any],
+                   results: List[RequestResult], clock) -> None:
+        """Chunk-boundary lifecycle sweep: cancels, deadlines, shedding.
+
+        Runs BEFORE admission each iteration so a doomed request never
+        eats a prefill, and before the decode chunk so an evicted slot's
+        budget is not spent on tokens nobody will read.
+        """
+        now = clock()
+        uids = set()
+        while self._cancel_uids:            # drain-safe vs concurrent adds
+            uids.add(self._cancel_uids.pop())
+        for uid in uids:
+            req = sched.pop_queued(uid)
+            if req is not None:
+                self._unadmitted(sched, req, Status.CANCELLED, now, results)
+                continue
+            slot = next((s for s, r in sched.active.items()
+                         if r.uid == uid), None)
+            if slot is None:
+                continue                    # unknown or already finished
+            if sched.phase.get(slot) == PREFILLING:
+                req = self._abort_prefill(sched, slot)
+                self._unadmitted(sched, req, Status.CANCELLED, now, results)
+            else:
+                self._finish_slot(sched, state, slot, Status.CANCELLED,
+                                  now, results)
+        for req in sched.expire_queued(now):
+            self._unadmitted(sched, req, Status.DEADLINE_EXPIRED, now,
+                             results)
+        for slot in list(sched.active):
+            req = sched.active[slot]
+            if req.deadline_s is None or \
+                    now - req.arrival_time <= req.deadline_s:
+                continue
+            if sched.phase.get(slot) == PREFILLING:
+                req = self._abort_prefill(sched, slot)
+                self._unadmitted(sched, req, Status.DEADLINE_EXPIRED, now,
+                                 results)
+            else:
+                self._finish_slot(sched, state, slot,
+                                  Status.DEADLINE_EXPIRED, now, results)
+        for req in sched.enforce_bounds(now):
+            self._unadmitted(sched, req, Status.SHED, now, results)
+
+    def _quarantine(self, sched: SlotScheduler, state: Dict[int, Any],
+                    results: List[RequestResult], bad, cause: Dict[int, str],
+                    clock) -> None:
+        """Contain slots that tripped a detector this chunk.
+
+        The faulted chunk's emissions are DISCARDED (quarantine runs
+        before harvest), the slot is reset and returned to the free list,
+        and the victim either requeues (retry budget left — a fresh
+        prefill replays it from scratch, so a one-shot fault yields the
+        full fault-free output) or fails with its pre-fault prefix.
+        Healthy slots are untouched: decode rows are independent, so
+        their tokens/cache are bit-identical to a fault-free run.
+        """
+        for slot in [s for s in list(sched.active) if bad[s]]:
+            req = sched.active[slot]
+            emit(logger, "quarantine", uid=req.uid, slot=slot,
+                 shard=self._shard_of(slot), cause=cause.get(slot),
+                 retries_left=req.retries, chunk=self._chunk_idx - 1)
+            st = state.pop(slot, None)
+            sched.release(slot)
+            self.cache = self._reset(self.cache, jnp.int32(slot))
+            self._live[slot] = False
+            self._done[slot] = True
+            self._temp[slot] = 0.0
+            self._stop[slot] = -1
+            self._kv_armed[slot] = False
+            if req.retries > 0:
+                sched.submit(dataclasses.replace(req,
+                                                 retries=req.retries - 1))
+                emit(logger, "requeue", uid=req.uid,
+                     retries_left=req.retries - 1)
+                continue
+            now = clock()
+            out = st["out"] if st else []
+            admit = st["admit_time"] if st else now
+            ttft = (st["first_token_time"] - req.arrival_time) if st \
+                else float("inf")
+            res = RequestResult(
+                uid=req.uid, tokens=np.asarray(out, np.int32),
+                n_generated=len(out), queue_delay=admit - req.arrival_time,
+                ttft=ttft, decode_seconds=now - admit, status=Status.FAILED,
+                degraded=sched.degraded.pop(req.uid, None) is not None)
+            results.append(res)
+            emit(logger, "finish", uid=req.uid, slot=slot,
+                 shard=self._shard_of(slot), status=Status.FAILED,
+                 n=len(out), ttft=ttft, tok_s=res.decode_tok_s)
+
+    # -- KV integrity canaries (opt-in: kv_integrity=True) ------------------
+
+    def _kv_refresh(self) -> None:
+        """Checksum each live slot's committed KV rows before the chunk.
+
+        Decode only APPENDS: rows ``[0, pos)`` are immutable through a
+        healthy decode chunk, so their position-weighted fold
+        (``kv_slot_checksum``) must read back identical afterwards.
+        SWA rings break the immutability once a chunk can wrap
+        (``pos + chunk > window``) — those slots disarm (best-effort,
+        DESIGN.md §11) rather than false-positive.
+        """
+        pos = np.asarray(jax.device_get(self.cache["pos"]))
+        armed = self._live.copy()
+        w = self.cfg.sliding_window
+        if w:
+            armed &= pos + self.chunk <= w
+        self._kv_armed = armed
+        self._kv_upto = np.where(armed, pos, 0).astype(np.int32)
+        self._kv_sum = np.asarray(jax.device_get(
+            self._kv_check(self.cache, jnp.asarray(self._kv_upto))))
+
+    def _kv_verify(self):
+        """(B,) bool: armed slots whose committed rows changed bits."""
+        chk = np.asarray(jax.device_get(
+            self._kv_check(self.cache, jnp.asarray(self._kv_upto))))
+        return (chk != self._kv_sum) & self._kv_armed
+
+    # -- fault injection (no-op without a plan) -----------------------------
+
+    def _inject_faults(self, sched: SlotScheduler):
+        """Apply due faults from the serve's ``FaultPlan``; (B,) poison.
+
+        Without a plan this is a zeros vector and an early return — the
+        engine runs the exact fault-free programs.  Victim-targeted
+        faults wait (unfired) until their uid is actually DECODING, so a
+        fault aimed at a queued request fires on admission instead of
+        silently missing its window.
+        """
+        poison = np.zeros((self.n_slots,), bool)
+        plan = self._fault_plan
+        if plan is None:
+            return poison
+        ci = self._chunk_idx
+        for i, f in plan.pending("delay", ci):
+            plan.fire(i)
+            emit(logger, "fault", kind="delay", shard=f.shard,
+                 seconds=f.seconds, chunk=ci)
+            time.sleep(f.seconds)
+        uid2slot = {r.uid: s for s, r in sched.active.items()}
+        for i, f in plan.pending("nan_logits", ci):
+            s = uid2slot.get(f.uid)
+            if s is None or not self._live[s]:
+                continue
+            plan.fire(i)
+            poison[s] = True
+            emit(logger, "fault", kind="nan_logits", uid=f.uid, slot=s,
+                 chunk=ci)
+        for i, f in plan.pending("kv_flip", ci):
+            s = uid2slot.get(f.uid)
+            if s is None or not self._live[s]:
+                continue
+            n_rows = int(np.asarray(jax.device_get(self.cache["pos"]))[s])
+            if n_rows <= 0:
+                continue
+            plan.fire(i)
+            self.cache = flip_kv_bytes(self.cache, s, n_rows, plan.rng(i),
+                                       n_bytes=f.n_bytes)
+            emit(logger, "fault", kind="kv_flip", uid=f.uid, slot=s,
+                 n_bytes=f.n_bytes, chunk=ci)
+        return poison
+
+    def serve(self, requests: List[Request], progress_cb=None,
+              fault_plan=None) -> List[RequestResult]:
         """Drain ``requests`` (honoring arrival times) through the slots.
 
-        Returns one ``RequestResult`` per request (same order as
-        completion). The loop: admit into free slots whose requests have
-        arrived (whole prefills, or ONE lane chunk in chunked mode) ->
-        run one decode chunk over ALL slots -> harvest emissions per slot
-        -> evict finished slots (park pos, zero SSM state) -> repeat.
-        Idle gaps (queue non-empty but nothing arrived) sleep to the next
+        Returns one ``RequestResult`` per request — check ``status``:
+        completions are OK, evictions carry DEADLINE_EXPIRED/CANCELLED
+        with their partial output, backpressure rejects are SHED, and
+        containment trips with no retry budget left are FAILED.  The
+        loop per iteration: lifecycle sweep (cancels, deadlines,
+        bounded-queue shedding) -> admit into free slots whose requests
+        have arrived (whole prefills, or ONE lane chunk in chunked mode)
+        -> run one decode chunk over ALL slots -> containment checks
+        (finite-logits sentinel always; KV canaries when
+        ``kv_integrity``) and quarantine -> harvest emissions per slot ->
+        evict finished slots (park pos, zero SSM state) -> repeat.  Idle
+        gaps (queue non-empty but nothing arrived) sleep to the next
         arrival instead of spinning.
+
+        ``fault_plan`` (a ``serving.faults.FaultPlan``) injects seeded
+        faults for chaos testing; None (the default) leaves every hook a
+        no-op and the output bit-identical to pre-robustness serving.
         """
+        if fault_plan is not None:
+            fault_plan.reset()
+            requests = fault_plan.apply_arrivals(requests)
+        self._fault_plan = fault_plan
+        self._chunk_idx = 0
+        self._cancel_uids.clear()   # stale cancels target a PAST serve
         sched = self._make_sched()
         for r in requests:
             # reject overflow up front: a full-cache slot would clamp-write
@@ -806,7 +1324,10 @@ class ContinuousEngine:
         results: List[RequestResult] = []
         chunked = self.prefill_mode == "chunked"
 
-        while sched.has_work:
+        while True:
+            self._lifecycle(sched, state, results, clock)
+            if not sched.has_work:
+                break
             now = clock()
             if chunked:
                 self._advance_lane(sched, state, clock)
@@ -820,23 +1341,41 @@ class ContinuousEngine:
                 time.sleep(max(nxt - clock(), 0.0))
                 continue
 
-            emitted, tok, self.cache, keys, done, n_gen = self._chunk_jit(
+            if self.kv_integrity:
+                self._kv_refresh()
+            poison = self._inject_faults(sched)
+            (emitted, tok, self.cache, keys, done, n_gen,
+             finite) = self._chunk_jit(
                 self.params, jnp.asarray(self._tok), self.cache,
                 jnp.asarray(self._keys), jnp.asarray(self._done),
                 jnp.asarray(self._n_gen), jnp.asarray(self._max_new),
                 jnp.asarray(self._temp), jnp.asarray(self._stop),
-                self._decode_live(),
+                self._decode_live(), jnp.asarray(poison),
                 n_steps=self.chunk,
                 greedy=bool((self._temp == 0.0).all()))
             # one host transfer per chunk; copies (not views) because the
             # admission path mutates these slotwise between chunks
-            emitted, tok, keys, done, n_gen = jax.device_get(
-                (emitted, tok, keys, done, n_gen))
+            emitted, tok, keys, done, n_gen, finite = jax.device_get(
+                (emitted, tok, keys, done, n_gen, finite))
             self._tok = np.array(tok)
             self._keys = np.array(keys, np.uint32)
             self._done = np.array(done)
             self._n_gen = np.array(n_gen)
+            self._chunk_idx += 1
             now = clock()
+
+            # containment: sentinel (always) + KV canaries (opt-in), then
+            # quarantine BEFORE harvest so a faulted chunk's tokens are
+            # discarded rather than delivered
+            bad = ~np.asarray(finite) & self._live
+            cause = {int(s): "nan_logits" for s in np.nonzero(bad)[0]}
+            if self.kv_integrity:
+                kv_bad = self._kv_verify() & self._live
+                for s in np.nonzero(kv_bad & ~bad)[0]:
+                    cause[int(s)] = "kv_integrity"
+                bad = bad | kv_bad
+            if bad.any():
+                self._quarantine(sched, state, results, bad, cause, clock)
 
             for slot in list(sched.active):
                 st = state.get(slot)
@@ -846,23 +1385,9 @@ class ContinuousEngine:
                 st["out"].extend(emitted[slot, :delta].tolist())
                 st["prev_n_gen"] = int(self._n_gen[slot])
                 if self._done[slot]:
-                    req = sched.release(slot)
-                    self.cache = self._reset(self.cache, jnp.int32(slot))
-                    self._live[slot] = False
-                    self._temp[slot] = 0.0   # parked slots don't hold the
-                    self._stop[slot] = -1    # chunk in sampled mode
-                    results.append(RequestResult(
-                        uid=req.uid,
-                        tokens=np.asarray(st["out"], np.int32),
-                        n_generated=len(st["out"]),
-                        queue_delay=st["admit_time"] - req.arrival_time,
-                        ttft=st["first_token_time"] - req.arrival_time,
-                        decode_seconds=now - st["admit_time"]))
-                    logger.info("finish uid=%d slot=%d n=%d ttft=%.3fs "
-                                "tok_s=%.1f", req.uid, slot,
-                                len(st["out"]), results[-1].ttft,
-                                results[-1].decode_tok_s)
-                    del state[slot]
+                    self._finish_slot(sched, state, slot, Status.OK, now,
+                                      results)
             if progress_cb is not None:
                 progress_cb(self, sched)
+        self._fault_plan = None
         return results

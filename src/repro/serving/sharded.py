@@ -50,9 +50,11 @@ from repro.core.qtensor import QuantPolicy
 from repro.models import (init_cache, init_lane, prefill_chunk,
                           prefill_into_slot, reset_slot)
 from repro.models.common import ModelConfig
+from repro.models.kvcache import kv_slot_checksum
 from repro.sharding import (mesh_fingerprint, shard_map_manual,
                             slot_cache_specs)
 from .engine import cached_program
+from .events import emit
 from .scheduler import (ContinuousEngine, ShardedSlotScheduler,
                         SlotScheduler)
 
@@ -167,14 +169,15 @@ class ShardedContinuousEngine(ContinuousEngine):
         # the decode chunk body IS the unsharded one — decode is row-
         # independent, so manual sharding is pure slicing (the bitwise
         # oracle rests exactly here); only (n_steps, greedy) are static
-        chunk_in = (_R, _Pd, cspec, _Pd, _Pd, _Pd, _Pd, _Pd, _Pd, _Pd)
-        chunk_out = (_Pd, _Pd, cspec, _Pd, _Pd, _Pd)
+        chunk_in = (_R, _Pd, cspec, _Pd, _Pd, _Pd, _Pd, _Pd, _Pd, _Pd, _Pd)
+        chunk_out = (_Pd, _Pd, cspec, _Pd, _Pd, _Pd, _Pd)
 
         def build_chunk():
             memo: Dict[Any, Any] = {}
 
             def chunk(params, tok, cache, keys, done, n_gen, max_new,
-                      temp, stop, live, *, n_steps: int, greedy: bool):
+                      temp, stop, live, poison, *, n_steps: int,
+                      greedy: bool):
                 fn = memo.get((n_steps, greedy))
                 if fn is None:
                     body = functools.partial(
@@ -183,12 +186,23 @@ class ShardedContinuousEngine(ContinuousEngine):
                     fn = memo[(n_steps, greedy)] = jax.jit(shard_map_manual(
                         body, mesh, in_specs=chunk_in, out_specs=chunk_out))
                 return fn(params, tok, cache, keys, done, n_gen, max_new,
-                          temp, stop, live)
+                          temp, stop, live, poison)
 
             return chunk
 
         self._chunk_jit = cached_program(("cont_chunk", cfg, kv, mk),
                                          build_chunk)
+
+        if self.kv_integrity:
+            # the canary is per-slot arithmetic over the local cache
+            # slice — the manual body is the unsharded checksum verbatim
+            def kv_body(cache, upto):
+                return kv_slot_checksum(cfg, cache, upto)
+
+            self._kv_check = cached_program(
+                ("kv_check", cfg, kv, mk),
+                lambda: jax.jit(shard_map_manual(
+                    kv_body, mesh, in_specs=(cspec, _Pd), out_specs=_Pd)))
 
     def _build_lane(self) -> None:
         cfg, kv, mesh, mk = self.cfg, self._kv, self.mesh, self._mesh_key
@@ -275,7 +289,16 @@ class ShardedContinuousEngine(ContinuousEngine):
 
     def _make_sched(self) -> SlotScheduler:
         return ShardedSlotScheduler(self.n_shards, self.slots_per_shard,
-                                    policy=self.admission_policy)
+                                    policy=self.admission_policy,
+                                    max_queue=self.max_queue,
+                                    shedding=self.shedding)
+
+    def _shard_of(self, slot: int):
+        return slot // self.slots_per_shard
+
+    def _drop_lane_cursor(self, slot: int) -> None:
+        self._pf = {sh: pf for sh, pf in self._pf.items()
+                    if pf["slot"] != slot}
 
     def _decode_live(self):
         # the sharded chunk program always takes the live vector (one
@@ -365,6 +388,6 @@ class ShardedContinuousEngine(ContinuousEngine):
             state[slot] = {"admit_time": pf["admit_time"],
                            "first_token_time": clock(), "out": [],
                            "prev_n_gen": 0}
-            logger.info("prefill-done uid=%d shard=%d slot=%d prompt=%d "
-                        "ttft=%.3fs", req.uid, shard, slot, t,
-                        state[slot]["first_token_time"] - req.arrival_time)
+            emit(logger, "prefill-done", uid=req.uid, shard=shard,
+                 slot=slot, prompt=t,
+                 ttft=state[slot]["first_token_time"] - req.arrival_time)

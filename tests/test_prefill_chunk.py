@@ -258,18 +258,26 @@ def _req(uid, t, arrival):
 
 def test_admission_policy_selection_order():
     """FIFO takes arrival order; SPF takes the shortest arrived prompt;
-    the deadline policy takes least slack (longer prompt = less slack at
-    equal deadlines); none admit the future."""
+    the deadline policy takes least NON-NEGATIVE slack (longer prompt =
+    less slack at equal deadlines) and refuses expired requests rather
+    than admitting them; none admit the future."""
     queue = [_req(0, 32, 0.0), _req(1, 8, 0.1), _req(2, 64, 0.2),
              _req(3, 4, 9.9)]                       # uid 3 hasn't arrived
     assert FifoPolicy().select(queue, now=1.0) == 0
     assert ShortestPromptFirst().select(queue, now=1.0) == 1
     # least slack: deadline_s equal, prefill estimate makes the 64-token
-    # prompt the most urgent of the arrived three
-    pol = TtftDeadline(deadline_s=0.5, prefill_s_per_tok=0.01)
-    assert pol.select(queue, now=1.0) == 2
+    # prompt the most urgent of the arrived three (all slacks positive)
+    pol = TtftDeadline(deadline_s=1.0, prefill_s_per_tok=0.01)
+    assert pol.select(queue, now=0.3) == 2
+    assert pol.expired(queue, now=0.3) == []
+    # once every arrived request's slack is negative the policy selects
+    # NONE of them (the old behavior admitted the least-expired — work
+    # guaranteed to miss its deadline) and reports them for expiry
+    stale = TtftDeadline(deadline_s=0.5, prefill_s_per_tok=0.01)
+    assert stale.select(queue, now=1.0) is None
+    assert stale.expired(queue, now=1.0) == [0, 1, 2]
     # with no prefill estimate it degrades to earliest deadline = FIFO
-    assert TtftDeadline(deadline_s=0.5).select(queue, now=1.0) == 0
+    assert TtftDeadline(deadline_s=1.5).select(queue, now=1.0) == 0
     assert FifoPolicy().select(queue[3:], now=1.0) is None
 
 

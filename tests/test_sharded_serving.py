@@ -11,8 +11,6 @@ shard-routed admission bookkeeping, mesh-keyed compile caching, p_chunk
 autotuning — runs meshless right here.
 """
 import os
-import subprocess
-import sys
 
 import numpy as np
 import jax
@@ -254,15 +252,14 @@ check("llama3_8b", "nxfp4", "chunked", 8, 4, [8, 17, 8, 16, 9],
 
 
 def _run_oracle(cases: str, n_devices: int):
+    from conftest import run_subprocess
     flags = (os.environ.get("XLA_FLAGS", "")
              + f" --xla_force_host_platform_device_count={n_devices}") \
         .strip()
-    env = {**os.environ, "XLA_FLAGS": flags, "PYTHONPATH": "src"}
-    out = subprocess.run(
-        [sys.executable, "-c", _ORACLE.replace("CASES", cases)], env=env,
-        capture_output=True, text=True, timeout=560,
-        cwd=os.path.dirname(os.path.dirname(__file__)))
-    assert "SUBPROC_OK" in out.stdout, out.stdout + out.stderr
+    env = {**os.environ, "XLA_FLAGS": flags,
+           "PYTHONPATH": os.path.join(
+               os.path.dirname(os.path.dirname(__file__)), "src")}
+    run_subprocess(["-c", _ORACLE.replace("CASES", cases)], env)
 
 
 @pytest.mark.slow

@@ -1,8 +1,5 @@
 """Sharding rules unit tests (no devices needed) + an 8-device subprocess
 lowering test of the real dry-run machinery."""
-import subprocess
-import sys
-
 import jax
 import numpy as np
 import pytest
@@ -77,14 +74,13 @@ print("SUBPROC_OK", colls)
 def test_multidevice_lowering_subprocess():
     """Real mesh lowering in a subprocess with 8 host devices (keeps this
     pytest process at 1 device, as required)."""
-    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
-           "PYTHONPATH": "src"}
     import os
-    env = {**os.environ, **env}
-    out = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
-                         capture_output=True, text=True, timeout=560,
-                         cwd=os.path.dirname(os.path.dirname(__file__)))
-    assert "SUBPROC_OK" in out.stdout, out.stdout + out.stderr
+    from conftest import run_subprocess
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": os.path.join(
+               os.path.dirname(os.path.dirname(__file__)), "src")}
+    run_subprocess(["-c", _SUBPROC], env)
 
 
 def test_single_device_visible_here():
