@@ -17,6 +17,11 @@ prompt/output lengths served two ways — fixed FIFO batches through
 boundaries, DESIGN.md §8). Reports aggregate useful tok/s and p50/p99
 TTFT for both.
 
+The ISSUE-7 scenarios (``preemption``, ``drain``): priority preemption
+priced against wait-your-turn on the same workload, and a live shard
+drain-and-migrate priced against the same traffic served healthy — both
+with the §12 bitwise contract asserted in-bench before any row lands.
+
 CPU-container caveat (DESIGN.md §6): absolute tok/s is not TPU wall time,
 but the dispatch-overhead regime this bench isolates is *worse* on real
 accelerators (per-dispatch latency hides more compute), so the host→device
@@ -28,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 import subprocess
 import sys
@@ -40,9 +46,10 @@ from repro.core.qtensor import QuantPolicy
 from repro.models import init_params
 from repro.models.common import ModelConfig
 from repro.serving import (ContinuousEngine, DegradeOverBudget, DropOldest,
-                           Fault, FaultPlan, FifoPolicy, RejectNew, Request,
+                           Fault, FaultPlan, FifoPolicy, PriorityAdmission,
+                           PriorityPreemption, RejectNew, Request,
                            ServeEngine, ShortestPromptFirst, Status,
-                           TtftDeadline)
+                           TtftDeadline, parse_event)
 from .common import Csv
 
 # small enough that a decode step's FLOPs sit well under the per-dispatch
@@ -511,6 +518,112 @@ def run_overload(csv: Csv):
                 derived, unit="us_per_tok")
 
 
+# ---------------------------------------------------------------------------
+# preempt/resume (ISSUE-7): interactive-overtakes-batch, priced
+# ---------------------------------------------------------------------------
+
+def run_preemption(csv: Csv):
+    """Priority preemption vs wait-your-turn on the same workload.
+
+    Two batch requests occupy both slots when a high-priority interactive
+    request arrives.  Per-chunk delay faults pin the batch chunk cadence
+    (the tiny CPU model would otherwise drain a batch slot in
+    milliseconds and nothing would ever need to yield).  Without a
+    preemption policy the interactive request waits for a batch slot to
+    finish; with ``PriorityPreemption`` the lowest-priority slot suspends
+    to a snapshot and yields at the next chunk boundary.  The row asserts
+    the DESIGN.md §12 contract before reporting: preempt + resume events
+    fired, the interactive request finished before its victim, and every
+    stream — victim included — is bit-identical to the no-preemption run
+    (preemption costs a pause, never lost work).
+    """
+    cfg = SERVE_CFG
+    n_slots, chunk, prompt = 2, 4, 8
+    batch_new = 12 if _quick() else 24
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    policy = QuantPolicy(weight_fmt="nxfp4", kv_fmt="nxfp4")
+    rng = np.random.default_rng(5)
+    toks = [rng.integers(0, cfg.vocab, (prompt,)).astype(np.int32)
+            for _ in range(3)]
+
+    def mk():
+        return [Request(uid=0, tokens=toks[0], max_new=batch_new,
+                        priority=0),
+                Request(uid=1, tokens=toks[1], max_new=batch_new,
+                        priority=0),
+                Request(uid=2, tokens=toks[2], max_new=4,
+                        priority=5, arrival_time=0.01)]
+
+    plan = FaultPlan(faults=tuple(
+        Fault(kind="delay", chunk=k, seconds=0.02)
+        for k in range(batch_new // chunk)))
+
+    msgs = []
+    handler = logging.Handler()
+    handler.emit = lambda rec: msgs.append(rec.getMessage())
+    log = logging.getLogger("repro.serving")
+    log.addHandler(handler)
+    old_level = log.level
+    log.setLevel(logging.INFO)
+    runs = {}
+    try:
+        for label, preempt in [("no-preempt", None),
+                               ("priority-preempt", PriorityPreemption())]:
+            eng = ContinuousEngine(
+                cfg, params, policy, n_slots=n_slots,
+                max_len=prompt + batch_new + 8, chunk=chunk,
+                admission_policy=PriorityAdmission(), preemption=preempt)
+            # warm prefill/decode AND the snapshot extract/restore pair (a
+            # suspend compiles both) so no jit lands in the timed serve
+            warm = {"n": 0}
+
+            def warm_cb(engine, sched):
+                if warm["n"] == 0:
+                    engine.suspend(-1)
+                warm["n"] += 1
+
+            eng.serve([Request(uid=-1, tokens=np.zeros((prompt,), np.int32),
+                               max_new=2 * chunk)], progress_cb=warm_cb)
+            msgs.clear()
+            t0 = time.time()
+            results = eng.serve(mk(), fault_plan=plan)
+            wall = time.time() - t0
+            events = [e for e in (parse_event(m) for m in msgs) if e]
+            runs[label] = ({r.uid: r for r in results}, wall, events)
+    finally:
+        log.removeHandler(handler)
+        log.setLevel(old_level)
+
+    ref, _, _ = runs["no-preempt"]
+    got, _, events = runs["priority-preempt"]
+    kinds = [e["event"] for e in events]
+    if "preempt" not in kinds or "resume" not in kinds:
+        raise AssertionError(f"no preemption occurred: {kinds}")
+    victim = next(e["uid"] for e in events if e["event"] == "preempt")
+    order = [e["uid"] for e in events if e["event"] == "finish"]
+    if order.index(2) >= order.index(victim):
+        raise AssertionError(
+            f"interactive request did not overtake victim {victim}: {order}")
+    for uid, want in ref.items():
+        r = got[uid]
+        if r.status != Status.OK or not np.array_equal(r.tokens, want.tokens):
+            raise AssertionError(
+                f"preemption perturbed uid={uid} (status={r.status})")
+
+    ref_ttft = ref[2].ttft
+    for label, (res, wall, evs) in runs.items():
+        toks_out = sum(r.n_generated for r in res.values())
+        ttft_ms = res[2].ttft * 1e3
+        derived = (f"tok_s={toks_out / wall:.0f} "
+                   f"interactive_ttft_ms={ttft_ms:.1f} slots={n_slots}")
+        if label == "priority-preempt":
+            n_pre = sum(1 for e in evs if e["event"] == "preempt")
+            derived += (f" ttft_improvement={ref_ttft / res[2].ttft:.2f}x"
+                        f" n_preempted={n_pre} bit_identical=True")
+        csv.add(f"serving/preemption/{label}", 1e6 / (toks_out / wall),
+                derived, unit="us_per_tok")
+
+
 def run_p_chunk_auto(csv: Csv):
     """The p_chunk="auto" warmup sweep, reported as rows.
 
@@ -649,6 +762,131 @@ def run_sharded(csv: Csv):
                 1e6 / row["tok_s"], derived, unit="us_per_tok")
 
 
+# ---------------------------------------------------------------------------
+# shard drain / live migration (ISSUE-7): shard_down vs healthy serving
+# ---------------------------------------------------------------------------
+
+_DRAIN_SCRIPT = r"""
+import json, logging, sys, time
+import numpy as np
+import jax
+from repro.core.qtensor import QuantPolicy
+from repro.models import init_params
+from repro.models.common import ModelConfig
+from repro.serving import (ContinuousEngine, Fault, FaultPlan, Request,
+                           parse_event)
+from repro.serving.sharded import ShardedContinuousEngine
+from repro.launch.mesh import make_serving_mesh
+
+cfg = ModelConfig(name="serve-lm", family="dense", n_layers=1, d_model=64,
+                  n_heads=1, n_kv_heads=1, d_ff=256, vocab=256, remat=False)
+n_slots, chunk, prompt, victim = 8, 4, 8, 1
+max_news = [16, 18, 12, 14, 16, 10]
+max_len = prompt + max(max_news) + 8
+params = init_params(cfg, jax.random.PRNGKey(0))
+policy = QuantPolicy(weight_fmt="nxfp4", kv_fmt="nxfp4")
+kw = dict(n_slots=n_slots, max_len=max_len, chunk=chunk,
+          prefill_mode="whole")
+
+msgs = []
+h = logging.Handler()
+h.emit = lambda rec: msgs.append(rec.getMessage())
+log = logging.getLogger("repro.serving")
+log.addHandler(h)
+log.setLevel(logging.INFO)
+
+def mk():
+    rng = np.random.default_rng(0)
+    return [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab, (prompt,))
+                    .astype(np.int32),
+                    max_new=m, arrival_time=0.0 if i < 4 else 0.02)
+            for i, m in enumerate(max_news)]
+
+def serve_sharded(plan=None):
+    eng = ShardedContinuousEngine(cfg, params, policy,
+                                  make_serving_mesh(2), **kw)
+    eng.serve([Request(uid=-1, tokens=np.zeros((prompt,), np.int32),
+                       max_new=chunk)])
+    msgs.clear()
+    t0 = time.time()
+    results = eng.serve(mk(), fault_plan=plan)
+    wall = time.time() - t0
+    evs = [e for e in (parse_event(m) for m in msgs) if e]
+    return {r.uid: r for r in results}, wall, evs
+
+ref = {r.uid: r.tokens for r in ContinuousEngine(
+    cfg, params, policy, **kw).serve(mk())}
+plan = FaultPlan(faults=(Fault(kind="shard_down", chunk=1, shard=victim),))
+healthy, wall_h, _ = serve_sharded()
+serve_sharded(plan)       # warm the migration snapshot/restore programs
+drained, wall_d, evs = serve_sharded(plan)
+
+for label, got in [("no-drain", healthy), ("shard-down", drained)]:
+    for uid, want in ref.items():
+        assert got[uid].status == "OK", (label, uid, got[uid].status)
+        if not np.array_equal(got[uid].tokens, want):
+            raise AssertionError(
+                f"{label}: uid={uid} diverged from unsharded run")
+kinds = [e["event"] for e in evs]
+assert "drain" in kinds and "migrate" in kinds, kinds
+assert any(e["event"] == "fault" and e["kind"] == "shard_down"
+           for e in evs)
+di = next(i for i, e in enumerate(evs) if e["event"] == "drain")
+for e in evs[di + 1:]:
+    if e["event"] in ("admit", "prefill-start"):
+        assert e.get("shard") != victim, e
+n_mig = sum(1 for e in evs if e["event"] == "migrate")
+for label, got, wall in [("no-drain", healthy, wall_h),
+                         ("shard-down", drained, wall_d)]:
+    useful = sum(r.n_generated for r in got.values())
+    row = {"label": label, "tok_s": useful / wall,
+           "n_req": len(max_news), "slots": n_slots}
+    if label == "shard-down":
+        row["n_migrated"] = n_mig
+        row["overhead"] = wall_d / wall_h
+    print("ROW " + json.dumps(row))
+print("DRAIN_BENCH_OK")
+"""
+
+
+def run_drain(csv: Csv):
+    """Live shard drain under a 2-shard mesh, vs the same traffic healthy.
+
+    A ``shard_down`` fault at chunk 1 drains shard 1 mid-serve: its live
+    DECODING slots snapshot and migrate onto free healthy slots and the
+    scheduler stops routing to it.  The subprocess (2 forced host
+    devices) asserts the full §12 contract before any row is written —
+    every stream including the migrated ones bit-identical to the
+    UNSHARDED no-fault run, drain + migrate events journaled, zero
+    admissions to the drained shard afterward.  The shard-down row
+    prices the migration pause against the healthy run; same CPU caveat
+    as ``run_sharded`` (overheads are real, scaling is not).
+    """
+    flags = (os.environ.get("XLA_FLAGS", "")
+             + " --xla_force_host_platform_device_count=2").strip()
+    env = {**os.environ, "XLA_FLAGS": flags, "PYTHONPATH": "src"}
+    out = subprocess.run(
+        [sys.executable, "-c", _DRAIN_SCRIPT],
+        env=env, capture_output=True, text=True, timeout=1200,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if "DRAIN_BENCH_OK" not in out.stdout:
+        raise AssertionError(f"drain bench subprocess failed:\n"
+                             f"{out.stdout}\n{out.stderr}")
+    for line in out.stdout.splitlines():
+        if not line.startswith("ROW "):
+            continue
+        row = json.loads(line[4:])
+        derived = (f"tok_s={row['tok_s']:.0f} n_req={row['n_req']} "
+                   f"slots={row['slots']} shards=2")
+        if row["label"] == "shard-down":
+            derived += (f" n_migrated={row['n_migrated']}"
+                        f" drain_overhead={row['overhead']:.2f}x"
+                        f" bit_identical=True")
+        csv.add(f"serving/drain/{row['label']}", 1e6 / row["tok_s"],
+                derived, unit="us_per_tok")
+
+
 def run(csv: Csv):
     run_loops(csv)
     run_continuous(csv)
@@ -656,8 +894,10 @@ def run(csv: Csv):
     run_admission_policies(csv)
     run_faults(csv)
     run_overload(csv)
+    run_preemption(csv)
     run_p_chunk_auto(csv)
     run_sharded(csv)
+    run_drain(csv)
 
 
 def main():

@@ -8,17 +8,32 @@ greedy output is checked bit-identical to serving it alone through the
 per-token host loop (the DESIGN.md §8 invariant that makes the scheduler
 testable).
 
+The preempt/resume and drain scenarios (DESIGN.md §12) ride the same
+oracle: a batch slot suspended for a higher-priority arrival and a
+whole shard drained mid-serve must both leave every token stream
+bit-identical to uninterrupted solo serving.
+
     PYTHONPATH=src python examples/continuous_serving.py
 """
 import logging
+import os
+
+# the drain scenario needs a 2-shard mesh: force two host devices
+# BEFORE jax initializes (a no-op on real multi-device backends)
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=2")
 
 import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.qtensor import QuantPolicy
+from repro.launch.mesh import make_serving_mesh
 from repro.models import init_params
-from repro.serving import ContinuousEngine, Request, ServeEngine
+from repro.serving import (ContinuousEngine, Fault, FaultPlan,
+                           PriorityAdmission, PriorityPreemption, Request,
+                           ServeEngine, parse_event)
+from repro.serving.sharded import ShardedContinuousEngine
 
 N_SLOTS = 2
 N_REQUESTS = 6
@@ -61,6 +76,105 @@ def main():
           f"every output bit-identical to solo host-loop serving.")
 
     long_prompt_scenario(cfg, params, policy)
+    preemption_scenario(cfg, params, policy)
+    drain_scenario(cfg, params, policy)
+
+
+def _capture_events():
+    """Collect journal records off the ``repro.serving`` logger."""
+    msgs = []
+    handler = logging.Handler()
+    handler.emit = lambda rec: msgs.append(rec.getMessage())
+    logging.getLogger("repro.serving").addHandler(handler)
+    return msgs
+
+
+def _assert_solo(cfg, params, policy, reqs, results, max_len=64):
+    solo = ServeEngine(cfg, params, policy, max_len=max_len)
+    for r in sorted(results, key=lambda x: x.uid):
+        ref = solo.generate({"tokens": reqs[r.uid].tokens[None]},
+                            max_new=reqs[r.uid].max_new, loop="host")
+        assert np.array_equal(r.tokens, ref.tokens[0]), \
+            f"uid={r.uid} diverged from the solo oracle"
+
+
+def preemption_scenario(cfg, params, policy):
+    """Interactive overtakes batch: suspend to a snapshot, resume later.
+
+    Both slots hold low-priority batch requests when a high-priority
+    interactive request arrives; ``PriorityPreemption`` suspends the
+    lowest-priority slot at the next chunk boundary (its packed KV rows
+    and sampling state ship to a host snapshot), serves the interactive
+    request, then resumes the victim bit-identically — a pause, never
+    lost work.  A per-chunk delay fault slows the tiny model down enough
+    for the arrival to land mid-serve.
+    """
+    reqs = [Request(uid=0, tokens=np.arange(8, dtype=np.int32),
+                    max_new=24, priority=0),
+            Request(uid=1, tokens=np.arange(8, 16, dtype=np.int32),
+                    max_new=24, priority=0),
+            Request(uid=2, tokens=np.arange(16, 24, dtype=np.int32),
+                    max_new=6, priority=5, arrival_time=0.01)]
+    eng = ContinuousEngine(cfg, params, policy, n_slots=N_SLOTS,
+                           max_len=64, chunk=4,
+                           admission_policy=PriorityAdmission(),
+                           preemption=PriorityPreemption())
+    plan = FaultPlan(faults=tuple(Fault(kind="delay", chunk=k, seconds=0.02)
+                                  for k in range(6)))
+    msgs = _capture_events()
+    results = eng.serve(reqs, fault_plan=plan)
+    events = [e for e in (parse_event(m) for m in msgs) if e]
+
+    print("\npriority preemption (interactive uid=2 vs batch uid=0/1):")
+    for e in events:
+        if e["event"] in ("preempt", "resume", "finish"):
+            print(f"  seq={e['seq']:>3} {e['event']:<8} uid={e['uid']}")
+    kinds = [e["event"] for e in events]
+    assert "preempt" in kinds and "resume" in kinds
+    order = [e["uid"] for e in events if e["event"] == "finish"]
+    victim = next(e["uid"] for e in events if e["event"] == "preempt")
+    assert order.index(2) < order.index(victim)
+    _assert_solo(cfg, params, policy, reqs, results)
+    print(f"  uid={victim} suspended mid-decode, uid=2 overtook it, all "
+          f"{len(reqs)} streams bit-identical to solo serving.")
+
+
+def drain_scenario(cfg, params, policy):
+    """Live shard drain: migrate a shard's slots, keep every token.
+
+    A ``shard_down`` fault drains shard 1 mid-serve: its DECODING slots
+    snapshot and restore into free slots on shard 0, the scheduler stops
+    routing to shard 1, and every stream — migrated or not — still
+    matches the solo oracle bit for bit.
+    """
+    if jax.device_count() < 2:
+        print("\n(drain scenario skipped: need 2 devices)")
+        return
+    rng = np.random.default_rng(2)
+    reqs = [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab, (8,)).astype(np.int32),
+                    max_new=int(m))
+            for i, m in enumerate([16, 18, 12, 14])]
+    eng = ShardedContinuousEngine(cfg, params, policy,
+                                  make_serving_mesh(2),
+                                  n_slots=8, max_len=64, chunk=4)
+    plan = FaultPlan(faults=(Fault(kind="shard_down", chunk=1, shard=1),))
+    msgs = _capture_events()
+    results = eng.serve(reqs, fault_plan=plan)
+    events = [e for e in (parse_event(m) for m in msgs) if e]
+
+    print("\nlive shard drain (shard 1 down at chunk 1, 2-shard mesh):")
+    for e in events:
+        if e["event"] in ("drain", "migrate", "suspend"):
+            detail = " ".join(f"{k}={v}" for k, v in e.items()
+                              if k not in ("event", "seq"))
+            print(f"  seq={e['seq']:>3} {e['event']:<8} {detail}")
+    kinds = [e["event"] for e in events]
+    assert "drain" in kinds and "migrate" in kinds
+    _assert_solo(cfg, params, policy, reqs, results)
+    n_mig = kinds.count("migrate")
+    print(f"  {n_mig} slot(s) migrated off shard 1 live — all "
+          f"{len(reqs)} streams bit-identical to solo serving.")
 
 
 def long_prompt_scenario(cfg, params, policy):

@@ -240,6 +240,37 @@ def kv_slot_checksum(cfg: ModelConfig, cache, upto):
     return total
 
 
+def ssm_state_checksum(cfg: ModelConfig, cache):
+    """(B,) uint32 canary over each slot's recurrent SSM state.
+
+    The SSM analogue of ``kv_slot_checksum`` — but the invariant is
+    different: the recurrent ``h``/``conv`` state legitimately changes
+    INSIDE a decode chunk (it integrates every step), so there is no
+    stable-across-the-chunk prefix to pin.  What must hold is at-REST
+    integrity: the checksum taken after one chunk must match right
+    before the next, because nothing but decode, admission and slot
+    resets may touch the state — and the engine re-arms at each of
+    those.  A mismatch on an armed idle slot is memory corruption.
+
+    Folds every element (no row mask — state has no sequence axis) via
+    the same bit-exact ``byte_fold``; caches without SSM state return
+    zeros.  Per-slot terms only, so it runs unchanged per shard under
+    the manual shard_map.
+    """
+    b = cache["pos"].shape[0]
+    total = jnp.zeros((b,), jnp.uint32)
+    layers = cache.get("layers")
+    if layers is None:
+        return total
+    for name in ("h", "conv"):
+        leaf = layers.get(name)
+        if leaf is None:
+            continue
+        f = byte_fold(leaf, 2)                          # (L, B)
+        total = total + jnp.sum(f, axis=0, dtype=jnp.uint32)
+    return total
+
+
 def attend_decode(cfg: ModelConfig, layer_cache, q, pos,
                   kv_fmt: Optional[str]):
     """q (B, H, hd) attends to one layer's cache; pos (B,) per-slot positions.

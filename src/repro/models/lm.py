@@ -543,6 +543,34 @@ def write_cache_slot(cache: Dict[str, Any], solo: Dict[str, Any], slot,
     return new
 
 
+def read_cache_slot(cache: Dict[str, Any], slot):
+    """Slice ONE slot back out as a batch-1 cache (inverse of
+    ``write_cache_slot``).
+
+    Every leaf keeps its batch axis at size 1, so the result round-trips
+    through ``write_cache_slot`` bit-exactly — packed NxFP bytes, ring
+    meta and SSM state are sliced raw, never dequantized.  Shapes are
+    slot-independent (one compiled program serves every slot), which is
+    what makes live snapshot/migrate/restore cheap on the serving path.
+    """
+    out: Dict[str, Any] = {"pos": jax.lax.dynamic_slice(
+        cache["pos"], (jnp.asarray(slot, jnp.int32),), (1,))}
+    for name, group in cache.items():
+        if name == "pos":
+            continue
+        axis = _batch_axis(name)
+
+        def take(leaf):
+            idx = [jnp.zeros((), jnp.int32)] * leaf.ndim
+            idx[axis] = jnp.asarray(slot, jnp.int32)
+            sizes = list(leaf.shape)
+            sizes[axis] = 1
+            return jax.lax.dynamic_slice(leaf, idx, sizes)
+
+        out[name] = jax.tree.map(take, group)
+    return out
+
+
 def prefill_into_slot(cfg: ModelConfig, params: Params,
                       batch: Dict[str, Any], cache: Dict[str, Any], slot,
                       max_len: int, kv_fmt: Optional[str], apply=None):

@@ -1,16 +1,21 @@
 from .engine import ServeEngine, GenerationResult
-from .events import emit, parse_event
+from .events import EVENT_KINDS, Journal, emit, parse_event, replay
 from .faults import Fault, FaultPlan
 from .scheduler import (AdmissionPolicy, ContinuousEngine, DegradeOverBudget,
-                        DropOldest, FifoPolicy, RejectNew, Request,
-                        RequestResult, ShardedSlotScheduler, SheddingPolicy,
-                        ShortestPromptFirst, SlotScheduler, Status,
-                        TtftDeadline)
+                        DropOldest, FifoPolicy, PreemptionPolicy,
+                        PriorityAdmission, PriorityPreemption, RejectNew,
+                        Request, RequestResult, ShardedSlotScheduler,
+                        SheddingPolicy, ShortestPromptFirst, SlotScheduler,
+                        Status, TtftDeadline)
 from .sharded import ShardedContinuousEngine
+from .snapshot import SlotSnapshot, load_checkpoint, save_checkpoint
 
 __all__ = ["ServeEngine", "GenerationResult", "ContinuousEngine",
            "ShardedContinuousEngine", "Request", "RequestResult", "Status",
            "SlotScheduler", "ShardedSlotScheduler", "AdmissionPolicy",
            "FifoPolicy", "ShortestPromptFirst", "TtftDeadline",
+           "PriorityAdmission", "PreemptionPolicy", "PriorityPreemption",
            "SheddingPolicy", "RejectNew", "DropOldest", "DegradeOverBudget",
-           "Fault", "FaultPlan", "emit", "parse_event"]
+           "Fault", "FaultPlan", "SlotSnapshot", "save_checkpoint",
+           "load_checkpoint", "Journal", "replay", "EVENT_KINDS",
+           "emit", "parse_event"]

@@ -9,13 +9,29 @@ filters and levels keep working unchanged, and human-oriented messages
 (compile warnings, autotune summaries) coexist on the same loggers.
 ``parse_event`` is the read side: feed it captured log messages and it
 returns the event dicts, skipping the human text.
+
+``Journal`` makes the stream a RECOVERY LOG: one monotonic per-engine
+sequence number stamped on every record.  A replayed journal with a
+hole in its sequence is a journal that lost records (crashed writer,
+dropped shipment) — ``replay`` surfaces the gaps instead of silently
+reordering around them, and ``checkpoint``/``restore`` carry the
+cursor across processes so post-restore events extend the same
+sequence.
 """
 from __future__ import annotations
 
 import json
-from typing import Optional
+from typing import Iterable, List, Optional, Tuple
 
-__all__ = ["emit", "parse_event"]
+__all__ = ["emit", "parse_event", "Journal", "replay", "EVENT_KINDS"]
+
+# Every kind the engine/scheduler emit today.  Recovery kinds (suspend
+# through restore) are what journal replay reconstructs an engine's
+# request placement from.
+EVENT_KINDS = ("admit", "prefill-start", "prefill-done", "degrade",
+               "shed", "expire", "cancel", "fault", "quarantine",
+               "requeue", "finish", "suspend", "resume", "preempt",
+               "migrate", "drain", "checkpoint", "restore")
 
 
 def emit(logger, event: str, **fields) -> None:
@@ -44,3 +60,48 @@ def parse_event(message: str) -> Optional[dict]:
     except ValueError:
         return None
     return obj if isinstance(obj, dict) and "event" in obj else None
+
+
+class Journal:
+    """Monotonic sequence numbers over ``emit`` — the engine's event log.
+
+    One Journal per engine; the engine and its scheduler share it so
+    every record (including scheduler-side degrades) lands in ONE total
+    order.  ``seq`` is the next number to stamp; a checkpoint persists
+    it and ``restore`` resumes from it, so a post-crash journal reads as
+    a single continuous sequence (re-used numbers from the lost tail
+    dedupe on replay; true losses show up as gaps).
+    """
+
+    def __init__(self, start: int = 0):
+        self.seq = int(start)
+
+    def emit(self, logger, event: str, **fields) -> None:
+        emit(logger, event, seq=self.seq, **fields)
+        self.seq += 1
+
+
+def replay(messages: Iterable[str]) -> Tuple[List[dict], List[int]]:
+    """Reconstruct an ordered journal from captured log messages.
+
+    Returns ``(events, gaps)``: sequenced events sorted by ``seq``
+    (duplicates collapse — a restore re-issues the numbers of records
+    emitted after the last checkpoint), followed by any un-sequenced
+    records, and the list of missing sequence numbers between the
+    lowest and highest observed.  A non-empty ``gaps`` means the
+    recovery log lost records and replay-derived state is suspect.
+    """
+    evs = [e for e in (parse_event(m) for m in messages) if e is not None]
+    by_seq = {}
+    rest = []
+    for e in evs:
+        if isinstance(e.get("seq"), int):
+            by_seq.setdefault(e["seq"], e)
+        else:
+            rest.append(e)
+    ordered = [by_seq[s] for s in sorted(by_seq)]
+    gaps: List[int] = []
+    if by_seq:
+        lo, hi = min(by_seq), max(by_seq)
+        gaps = [s for s in range(lo, hi + 1) if s not in by_seq]
+    return ordered + rest, gaps

@@ -17,6 +17,10 @@ serving oracle is untouched.  Four fault kinds:
 - ``burst``: rewrites request arrival times into a ``[t0, t0 + span)``
   burst (order-preserving) to drive the bounded admission queue into
   shedding.  Applied once at ``serve()`` entry, not at chunk boundaries.
+- ``shard_down``: drains one shard of a sharded engine at the chunk
+  boundary — live requests snapshot-migrate onto healthy shards and the
+  scheduler stops routing there.  Exercises live migration end to end;
+  an unsharded engine has no shards and rejects the plan loudly.
 
 Faults are one-shot: each fires at the first chunk boundary ``>= chunk``
 where its victim is actually live (so a fault aimed at a queued request
@@ -34,7 +38,7 @@ import jax
 
 __all__ = ["Fault", "FaultPlan", "flip_kv_bytes", "KINDS"]
 
-KINDS = ("nan_logits", "kv_flip", "delay", "burst")
+KINDS = ("nan_logits", "kv_flip", "delay", "burst", "shard_down")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,7 +49,8 @@ class Fault:
     chunk:   earliest chunk boundary (0-based, counted per ``serve()``)
              at which the fault may fire.
     uid:     victim request uid for nan_logits / kv_flip.
-    shard:   informational tag for delay faults (which "shard" stalled).
+    shard:   victim shard for shard_down; informational tag for delay
+             faults (which "shard" stalled).
     seconds: sleep length for delay faults.
     n_bytes: number of packed-KV bytes to corrupt for kv_flip.
     t0/span: burst window for arrival-time rewrites.
@@ -65,6 +70,8 @@ class Fault:
                              f"expected one of {KINDS}")
         if self.kind in ("nan_logits", "kv_flip") and self.uid is None:
             raise ValueError(f"{self.kind} fault needs a victim uid")
+        if self.kind == "shard_down" and self.shard is None:
+            raise ValueError("shard_down fault needs a victim shard")
 
 
 @dataclasses.dataclass

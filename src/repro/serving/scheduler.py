@@ -62,12 +62,16 @@ import numpy as np
 from repro.core.qtensor import QuantPolicy, direct_cast_tree
 from repro.kernels.ops import quantize_qtensor
 from repro.models import (decode_loop, init_cache, init_lane, prefill_chunk,
-                          prefill_into_slot, reset_slot)
+                          prefill_into_slot, read_cache_slot, reset_slot,
+                          write_cache_slot)
 from repro.models.common import ModelConfig, gated_update_slice
-from repro.models.kvcache import kv_slot_checksum
+from repro.models.kvcache import kv_slot_checksum, ssm_state_checksum
 from .engine import cached_program, mask_chunk_emissions
-from .events import emit
+from .events import Journal, emit
 from .faults import flip_kv_bytes
+from .snapshot import (SlotSnapshot, load_checkpoint, pack_device_state,
+                       save_checkpoint, slot_row_capacity,
+                       unpack_device_state)
 
 logger = logging.getLogger("repro.serving.scheduler")
 
@@ -105,7 +109,11 @@ class Request:
     the request is evicted at the next chunk boundary with whatever it
     generated so far (DESIGN.md §11).  ``retries`` is the quarantine
     budget — how many times a containment trip may requeue this request
-    instead of failing it.
+    instead of failing it.  ``priority`` (higher = more urgent) feeds
+    priority admission and preemption (DESIGN.md §12): under a
+    ``PreemptionPolicy`` a waiting high-priority request may suspend the
+    lowest-priority decoding slot and take its place — the suspended
+    request resumes later bit-identically from its slot snapshot.
     """
     uid: int
     tokens: np.ndarray                  # (T,) int32 prompt
@@ -116,6 +124,7 @@ class Request:
     seed: int = 0
     deadline_s: Optional[float] = None
     retries: int = 0
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -129,9 +138,12 @@ class RequestResult:
     uid: int
     tokens: np.ndarray                  # (n_generated,) int32
     n_generated: int
-    queue_delay: float                  # arrival -> admission (s)
+    queue_delay: float                  # arrival -> FIRST admission (s)
     ttft: float                         # arrival -> first token (s)
-    decode_seconds: float               # admission -> completion (s)
+    decode_seconds: float               # OCCUPIED slot seconds (suspended
+    #                                     wall time between preempt/resume
+    #                                     is excluded, so decode_tok_s
+    #                                     prices the slot, not the parking)
     status: str = Status.OK
     degraded: bool = False
 
@@ -241,6 +253,21 @@ class TtftDeadline(AdmissionPolicy):
                 if r.arrival_time <= now and self._slack(r, now) < 0.0]
 
 
+class PriorityAdmission(AdmissionPolicy):
+    """Admit the arrived request with the HIGHEST ``Request.priority``
+    (ties: FIFO).  The admission half of "interactive overtakes batch" —
+    pair it with ``PriorityPreemption`` so a high-priority request also
+    gets a slot when none is free, not just first pick of one.
+    """
+
+    name = "priority"
+
+    def select(self, queue, now):
+        arrived = [(-r.priority, r.arrival_time, i)
+                   for i, r in enumerate(queue) if r.arrival_time <= now]
+        return min(arrived)[2] if arrived else None
+
+
 # ---------------------------------------------------------------------------
 # load shedding: WHAT gives way when the arrived queue exceeds max_queue?
 # ---------------------------------------------------------------------------
@@ -322,6 +349,61 @@ class DegradeOverBudget(SheddingPolicy):
 
 
 # ---------------------------------------------------------------------------
+# preemption: WHICH decoding slot yields when a more urgent request waits?
+# ---------------------------------------------------------------------------
+
+class PreemptionPolicy:
+    """Decides which DECODING slots to suspend for waiting requests.
+
+    ``victims`` returns slot ids to suspend this chunk boundary; each
+    victim is snapshotted (``SlotSnapshot`` — packed KV rows + sampling
+    state) and requeued as RESUMABLE, so preemption costs a pause, never
+    lost work: the resumed stream is bit-identical to an uninterrupted
+    run.  The default policy never preempts (PR-6 behavior).
+    """
+
+    name = "none"
+
+    def victims(self, sched: "SlotScheduler", now: float) -> List[int]:
+        return []
+
+
+class PriorityPreemption(PreemptionPolicy):
+    """Suspend the lowest-priority decoding slot for a strictly
+    higher-priority arrived waiter ("interactive overtakes batch").
+
+    Waiters claim free slots first (preemption is a last resort), then
+    each remaining waiter — most urgent first — may displace the
+    lowest-priority decoding slot if its own priority is STRICTLY
+    higher.  Strict comparison is the anti-thrash rule: the suspended
+    request re-enters the queue at its old priority and can never
+    preempt its preemptor back.  Mid-prefill slots are not preempted
+    (their lane restarts from chunk 0 — nothing resumable to save yet).
+    """
+
+    name = "priority"
+
+    def victims(self, sched, now):
+        waiting = sorted((r for r in sched.queue if r.arrival_time <= now),
+                         key=lambda r: (-r.priority, r.arrival_time))
+        if not waiting:
+            return []
+        pool = sorted(((r.priority, s) for s, r in sched.active.items()
+                       if sched.phase.get(s) == DECODING))
+        budget = len(sched.free)
+        out: List[int] = []
+        for w in waiting:
+            if budget > 0:
+                budget -= 1
+                continue
+            if pool and pool[0][0] < w.priority:
+                out.append(pool.pop(0)[1])
+            else:
+                break
+        return out
+
+
+# ---------------------------------------------------------------------------
 # slot bookkeeping
 # ---------------------------------------------------------------------------
 
@@ -348,11 +430,13 @@ class SlotScheduler:
 
     def __init__(self, n_slots: int, policy: Optional[AdmissionPolicy] = None,
                  max_queue: Optional[int] = None,
-                 shedding: Optional[SheddingPolicy] = None):
+                 shedding: Optional[SheddingPolicy] = None,
+                 journal: Optional[Journal] = None):
         self.n_slots = n_slots
         self.policy = policy or FifoPolicy()
         self.max_queue = max_queue
         self.shedding = shedding or RejectNew()
+        self.journal = journal or Journal()
         self.queue: List[Request] = []
         self.free: List[int] = list(range(n_slots))
         self.active: Dict[int, Request] = {}
@@ -360,6 +444,14 @@ class SlotScheduler:
         # uid -> (max_new_cap, force_greedy): degrade-tier markers applied
         # at admission time; popped into RequestResult.degraded at finish
         self.degraded: Dict[int, Tuple[Optional[int], bool]] = {}
+        # uid -> SlotSnapshot: queued requests that are RESUMABLE — they
+        # re-enter through snapshot restore, not a fresh prefill. Every
+        # path that removes a queued request (admission, shed, expire,
+        # cancel) must consume/pop its snapshot alongside.
+        self.resumable: Dict[int, SlotSnapshot] = {}
+        # shards taken out of rotation (sharded engine only: admission
+        # never routes to a drained shard; empty set for unsharded)
+        self.drained: set = set()
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -386,6 +478,22 @@ class SlotScheduler:
             return None
         idx = self.policy.select(self.queue, now)
         if idx is None:
+            return None
+        return self._take(idx, self.free[0])
+
+    def next_resume(self, now: float) -> Optional[Tuple[int, Request]]:
+        """Pop (slot, request) ONLY if the policy's pick is resumable.
+
+        Resume admission bypasses the prefill lane (a snapshot restore
+        is one scatter, not a prompt), so the engine drains these before
+        lane work each iteration — but strictly in policy order: a
+        resumable request never jumps a non-resumable one the policy
+        ranks higher.
+        """
+        if not self.free or not self.queue or not self.resumable:
+            return None
+        idx = self.policy.select(self.queue, now)
+        if idx is None or self.queue[idx].uid not in self.resumable:
             return None
         return self._take(idx, self.free[0])
 
@@ -428,8 +536,9 @@ class SlotScheduler:
             uid = self.queue[i].uid
             if uid not in self.degraded:
                 self.degraded[uid] = (cap, greedy)
-                emit(logger, "degrade", uid=uid, max_new_cap=cap,
-                     greedy=greedy, policy=self.shedding.name)
+                self.journal.emit(logger, "degrade", uid=uid,
+                                  max_new_cap=cap, greedy=greedy,
+                                  policy=self.shedding.name)
         shed = [self.queue.pop(i) for i in sorted(set(shed_idx),
                                                   reverse=True)]
         for r in shed:
@@ -446,6 +555,29 @@ class SlotScheduler:
         req = self.active.pop(slot)
         self.phase.pop(slot, None)
         self.free.append(slot)
+        return req
+
+    def suspend_to_queue(self, slot: int, snap: SlotSnapshot) -> Request:
+        """Release ``slot`` and requeue its request as RESUMABLE."""
+        req = self.release(slot)
+        self.resumable[req.uid] = snap
+        self.queue.append(req)
+        return req
+
+    def reassign(self, old: int, new: int) -> Request:
+        """Move a live request between slots (live migration bookkeeping).
+
+        The phase tag travels; ``old`` returns to the free list (its
+        shard may be drained — routing, not the free list, keeps drained
+        slots out of admission).  Device/host state moves are the
+        engine's job.
+        """
+        req = self.active.pop(old)
+        ph = self.phase.pop(old)
+        self.free.remove(new)
+        self.free.append(old)
+        self.active[new] = req
+        self.phase[new] = ph
         return req
 
     def next_arrival(self) -> Optional[float]:
@@ -494,13 +626,25 @@ class ShardedSlotScheduler(SlotScheduler):
     def free_on(self, shard: int) -> List[int]:
         return [s for s in self.free if self.shard_of(s) == shard]
 
+    def healthy_free(self) -> List[int]:
+        """Free slots on shards still in rotation (drain-aware)."""
+        return [s for s in self.free if self.shard_of(s) not in self.drained]
+
     def next_admission(self, now: float, shard: Optional[int] = None
                        ) -> Optional[Tuple[int, Request]]:
-        """Pop (global_slot, request), routed to ``shard`` (or least-loaded)."""
+        """Pop (global_slot, request), routed to ``shard`` (or least-loaded).
+
+        Drained shards are out of rotation: routed-to-drained returns
+        None (the caller's lane is being retired) and least-loaded picks
+        only among healthy shards.
+        """
         if not self.queue:
             return None
+        if shard is not None and shard in self.drained:
+            return None
         if shard is None:
-            with_free = {self.shard_of(s) for s in self.free}
+            with_free = ({self.shard_of(s) for s in self.free}
+                         - self.drained)
             if not with_free:
                 return None
             shard = min(with_free, key=lambda s: (self.load(s), s))
@@ -511,6 +655,21 @@ class ShardedSlotScheduler(SlotScheduler):
         if idx is None:
             return None
         return self._take(idx, free[0])
+
+    def next_resume(self, now: float) -> Optional[Tuple[int, Request]]:
+        """Resume routing: policy's resumable pick -> least-loaded healthy
+        shard (a snapshot restores into ANY free slot — the restore
+        scatter is owner-masked exactly like admission)."""
+        if not self.queue or not self.resumable:
+            return None
+        healthy = {self.shard_of(s) for s in self.free} - self.drained
+        if not healthy:
+            return None
+        idx = self.policy.select(self.queue, now)
+        if idx is None or self.queue[idx].uid not in self.resumable:
+            return None
+        shard = min(healthy, key=lambda s: (self.load(s), s))
+        return self._take(idx, self.free_on(shard)[0])
 
 
 class ContinuousEngine:
@@ -544,7 +703,8 @@ class ContinuousEngine:
                  p_chunk_candidates: Sequence[int] = (16, 32, 64, 128),
                  kv_integrity: bool = False,
                  max_queue: Optional[int] = None,
-                 shedding: Optional[SheddingPolicy] = None):
+                 shedding: Optional[SheddingPolicy] = None,
+                 preemption: Optional[PreemptionPolicy] = None):
         self.cfg = cfg
         self.policy = policy
         self.n_slots = n_slots
@@ -558,18 +718,34 @@ class ContinuousEngine:
         self.admission_policy = admission_policy
         assert prefill_mode in ("whole", "chunked"), prefill_mode
         self.prefill_mode = prefill_mode
-        if kv_integrity and cfg.family == "ssm":
-            raise ValueError("kv_integrity checksums attention KV caches; "
-                             "family='ssm' has none")
         self.kv_integrity = kv_integrity
         self.max_queue = max_queue
         self.shedding = shedding
+        self.preemption = preemption
+        self.journal = Journal()
         self._cancel_uids: set = set()
+        self._suspend_uids: set = set()
         self._fault_plan = None
         self._chunk_idx = 0
+        # attention-KV prefix canary (vacuous for pure-SSM families: no
+        # KV rows to pin — their canary is the at-rest SSM-state fold)
+        self._has_attn_kv = cfg.family != "ssm"
+        self._has_ssm = cfg.family in ("ssm", "hybrid")
         self._kv_armed = np.zeros((n_slots,), bool)
         self._kv_sum = np.zeros((n_slots,), np.uint32)
         self._kv_upto = np.zeros((n_slots,), np.int32)
+        self._ssm_armed = np.zeros((n_slots,), bool)
+        self._ssm_sum = np.zeros((n_slots,), np.uint32)
+        self._ssm_bad = np.zeros((n_slots,), bool)
+        # snapshots awaiting resume in the NEXT serve (checkpoint restore
+        # seeds these; serve() hands them to its scheduler)
+        self._pending_resume: Dict[int, SlotSnapshot] = {}
+        # live-serve introspection handles (checkpoint()/drain sweeps run
+        # from progress_cb and need the current sched/state/clock)
+        self._sched = None
+        self._state: Optional[Dict[int, Any]] = None
+        self._results: Optional[List[RequestResult]] = None
+        self._clock = None
         # compile-cache keys carry the mesh identity (None = unsharded):
         # a sharded and an unsharded engine on identical (cfg, kv, ...)
         # must never hand each other executables (ISSUE-5)
@@ -645,10 +821,23 @@ class ContinuousEngine:
             lambda: jax.jit(
                 functools.partial(self._chunk_fn, cfg=cfg, kv_fmt=kv),
                 static_argnames=("n_steps", "greedy")))
+        # snapshot extract/restore: one fixed-shape program each (slot is
+        # a traced index), shared by suspend, migration and checkpoint
+        self._snap = cached_program(
+            ("snap", cfg, kv, mk), lambda: jax.jit(read_cache_slot))
+        self._restore_prog = cached_program(
+            ("restore", cfg, kv, mk), lambda: jax.jit(write_cache_slot))
         if self.kv_integrity:
-            self._kv_check = cached_program(
-                ("kv_check", cfg, kv, mk),
-                lambda: jax.jit(functools.partial(kv_slot_checksum, cfg)))
+            if self._has_attn_kv:
+                self._kv_check = cached_program(
+                    ("kv_check", cfg, kv, mk),
+                    lambda: jax.jit(functools.partial(kv_slot_checksum,
+                                                      cfg)))
+            if self._has_ssm:
+                self._ssm_check = cached_program(
+                    ("ssm_check", cfg, mk),
+                    lambda: jax.jit(functools.partial(ssm_state_checksum,
+                                                      cfg)))
 
     def _build_lane(self) -> None:
         cfg, kv, mk = self.cfg, self._kv, self._mesh_key
@@ -877,6 +1066,10 @@ class ContinuousEngine:
 
     # -- host loop ----------------------------------------------------------
 
+    def _emit(self, event: str, **fields) -> None:
+        """Journal-sequenced event record (the engine's recovery log)."""
+        self.journal.emit(logger, event, **fields)
+
     def _arm_slot(self, slot: int, req: Request, tok0, key) -> None:
         """Host-side slot state for a freshly admitted, decoding request."""
         self._tok[slot] = int(tok0)
@@ -887,6 +1080,18 @@ class ContinuousEngine:
         self._max_new[slot] = req.max_new
         self._temp[slot] = req.temperature
         self._stop[slot] = -1 if req.stop_token is None else req.stop_token
+        self._ssm_armed[slot] = False
+
+    def _park_slot_flags(self, slot: int) -> None:
+        """Host flag parking for a slot leaving service (finish, abort,
+        quarantine, suspend, migrate-out).  One place so the canaries
+        disarm everywhere a slot's device state is about to be reset."""
+        self._live[slot] = False
+        self._done[slot] = True
+        self._temp[slot] = 0.0   # parked slots don't hold the
+        self._stop[slot] = -1    # chunk in sampled mode
+        self._kv_armed[slot] = False
+        self._ssm_armed[slot] = False
 
     def _admit_dispatch(self, slot: int, req: Request):
         """Run the whole-prompt admission program; host (tok0, key) out."""
@@ -907,21 +1112,34 @@ class ContinuousEngine:
         tok0, key = self._admit_dispatch(slot, req)
         self._arm_slot(slot, req, tok0, key)
         admit_done = clock()
-        emit(logger, "admit", uid=req.uid, slot=slot,
-             shard=self._shard_of(slot), prompt=t, max_new=req.max_new,
-             queue_delay=now - req.arrival_time)
-        return {"admit_time": now, "first_token_time": admit_done,
-                "out": [], "prev_n_gen": 0}
+        self._emit("admit", uid=req.uid, slot=slot,
+                   shard=self._shard_of(slot), prompt=t, max_new=req.max_new,
+                   queue_delay=now - req.arrival_time)
+        # queue_delay/ttft are REALIZED here and survive later suspensions
+        # (and clock rebasing across serves); decode_spent accumulates
+        # occupied seconds from earlier occupancies of this request
+        return {"admit_time": now, "out": [], "prev_n_gen": 0,
+                "queue_delay": now - req.arrival_time,
+                "ttft": admit_done - req.arrival_time, "decode_spent": 0.0}
 
     def _admit_ready(self, sched: SlotScheduler, state: Dict[int, Any],
                      now: float, clock) -> None:
-        """Whole-prompt admission: drain every (free slot, arrived req) pair."""
+        """Whole-prompt admission: drain every (free slot, arrived req) pair.
+
+        A picked request with a pending snapshot resumes (one restore
+        scatter) instead of prefilling from scratch — the policy ranked
+        it; how it re-enters is the snapshot's business.
+        """
         while True:
             adm = sched.next_admission(now)
             if adm is None:
                 return
             slot, req = adm
-            state[slot] = self._admit(slot, req, now, clock)
+            snap = sched.resumable.pop(req.uid, None)
+            if snap is not None:
+                self._resume(sched, state, slot, req, snap, clock)
+            else:
+                state[slot] = self._admit(slot, req, now, clock)
 
     # lane-cursor plumbing (the sharded engine keeps one cursor PER SHARD)
     def _park_lane(self) -> None:
@@ -956,9 +1174,17 @@ class ContinuousEngine:
             self._pf = None
 
     def _make_sched(self) -> SlotScheduler:
-        return SlotScheduler(self.n_slots, policy=self.admission_policy,
-                             max_queue=self.max_queue,
-                             shedding=self.shedding)
+        sched = SlotScheduler(self.n_slots, policy=self.admission_policy,
+                              max_queue=self.max_queue,
+                              shedding=self.shedding, journal=self.journal)
+        self._seed_sched(sched)
+        return sched
+
+    def _seed_sched(self, sched: SlotScheduler) -> None:
+        """Carry restore-pending snapshots (and drained shards, sharded)
+        into a fresh scheduler at serve() entry."""
+        sched.resumable.update(self._pending_resume)
+        self._pending_resume = {}
 
     def _start_prefill(self, sched: SlotScheduler, slot: int, req: Request,
                        now: float, shard=None) -> Dict[str, Any]:
@@ -970,14 +1196,11 @@ class ContinuousEngine:
         the sharded engine's per-shard lanes reuse this parking verbatim.
         """
         sched.mark_prefilling(slot)
-        self._live[slot] = False
-        self._done[slot] = True
-        self._temp[slot] = 0.0
-        self._stop[slot] = -1
-        emit(logger, "prefill-start", uid=req.uid, shard=shard, slot=slot,
-             prompt=len(req.tokens),
-             chunks=-(-len(req.tokens) // self.p_chunk),
-             queue_delay=now - req.arrival_time)
+        self._park_slot_flags(slot)
+        self._emit("prefill-start", uid=req.uid, shard=shard, slot=slot,
+                   prompt=len(req.tokens),
+                   chunks=-(-len(req.tokens) // self.p_chunk),
+                   queue_delay=now - req.arrival_time)
         return {"slot": slot, "req": req, "offset": 0, "admit_time": now}
 
     def _advance_lane(self, sched: SlotScheduler, state: Dict[int, Any],
@@ -990,11 +1213,15 @@ class ContinuousEngine:
         final chunk the slot is armed exactly as ``_admit`` would arm it.
         """
         now = clock()
-        if self._pf is None:
+        while self._pf is None:
             adm = sched.next_admission(now)
             if adm is None:
                 return
             slot, req = adm
+            snap = sched.resumable.pop(req.uid, None)
+            if snap is not None:    # resume: no lane needed, keep admitting
+                self._resume(sched, state, slot, req, snap, clock)
+                continue
             self._pf = self._start_prefill(sched, slot, req, now)
         pf = self._pf
         slot, req, off = pf["slot"], pf["req"], pf["offset"]
@@ -1015,11 +1242,13 @@ class ContinuousEngine:
             jnp.float32(req.temperature), self.cache, jnp.int32(slot), t)
         self._arm_slot(slot, req, tok0, key)
         sched.mark_decoding(slot)
-        state[slot] = {"admit_time": pf["admit_time"],
-                       "first_token_time": clock(), "out": [],
-                       "prev_n_gen": 0}
-        emit(logger, "prefill-done", uid=req.uid, slot=slot, prompt=t,
-             ttft=state[slot]["first_token_time"] - req.arrival_time)
+        state[slot] = {"admit_time": pf["admit_time"], "out": [],
+                       "prev_n_gen": 0,
+                       "queue_delay": pf["admit_time"] - req.arrival_time,
+                       "ttft": clock() - req.arrival_time,
+                       "decode_spent": 0.0}
+        self._emit("prefill-done", uid=req.uid, slot=slot, prompt=t,
+                   ttft=state[slot]["ttft"])
         self._pf = None
 
     # -- request lifecycle: cancellation, deadlines, shedding, quarantine ----
@@ -1040,16 +1269,42 @@ class ContinuousEngine:
         """
         self._cancel_uids.add(uid)
 
+    def suspend(self, uid: int) -> None:
+        """Request suspension of ``uid`` at the next chunk boundary.
+
+        A DECODING request is snapshotted (``SlotSnapshot``) and
+        requeued RESUMABLE: when the admission policy next picks it (and
+        a slot is free), it restores and continues bit-identically to an
+        uninterrupted run.  A PREFILLING request aborts its lane and
+        requeues plain (restarts from chunk 0 — DESIGN.md §12); queued,
+        unknown and finished uids are a no-op.  Same thread-safety
+        contract as ``cancel``.
+        """
+        self._suspend_uids.add(uid)
+
     def _unadmitted(self, sched: SlotScheduler, req: Request, status: str,
                     now: float, results: List[RequestResult]) -> None:
-        """Terminal result for a request that never produced a token."""
+        """Terminal result for a request that is leaving the QUEUE.
+
+        Usually a request that never produced a token — but a suspended
+        (resumable) one that gets shed/expired/cancelled while parked
+        still owns partial output and realized timings; its snapshot is
+        consumed into the result here so no generated token is ever
+        silently dropped.
+        """
+        snap = sched.resumable.pop(req.uid, None)
+        out = (np.asarray(snap.out, np.int32) if snap is not None
+               else np.zeros((0,), np.int32))
         results.append(RequestResult(
-            uid=req.uid, tokens=np.zeros((0,), np.int32), n_generated=0,
-            queue_delay=now - req.arrival_time, ttft=float("inf"),
-            decode_seconds=0.0, status=status,
+            uid=req.uid, tokens=out, n_generated=len(out),
+            queue_delay=(snap.queue_delay if snap is not None
+                         else now - req.arrival_time),
+            ttft=snap.ttft if snap is not None else float("inf"),
+            decode_seconds=snap.decode_spent if snap is not None else 0.0,
+            status=status,
             degraded=sched.degraded.pop(req.uid, None) is not None))
-        emit(logger, self._EVENT_OF[status], uid=req.uid, status=status,
-             queue_delay=now - req.arrival_time)
+        self._emit(self._EVENT_OF[status], uid=req.uid, status=status,
+                   queue_delay=now - req.arrival_time)
 
     def _finish_slot(self, sched: SlotScheduler, state: Dict[int, Any],
                      slot: int, status: str, now: float,
@@ -1064,36 +1319,231 @@ class ContinuousEngine:
         req = sched.release(slot)
         st = state.pop(slot, None)
         self.cache = self._reset(self.cache, jnp.int32(slot))
-        self._live[slot] = False
-        self._done[slot] = True
-        self._temp[slot] = 0.0   # parked slots don't hold the
-        self._stop[slot] = -1    # chunk in sampled mode
-        self._kv_armed[slot] = False
+        self._park_slot_flags(slot)
         out = st["out"] if st else []
-        admit = st["admit_time"] if st else now
-        ttft = (st["first_token_time"] - req.arrival_time) if st \
-            else float("inf")
+        ttft = st["ttft"] if st else float("inf")
+        qd = st["queue_delay"] if st else now - req.arrival_time
+        # decode_seconds = OCCUPIED time only: this occupancy plus any
+        # accumulated before a suspension — parked wall time between
+        # preempt and resume never counts against decode_tok_s
+        spent = (st["decode_spent"] + (now - st["admit_time"])) if st \
+            else 0.0
         res = RequestResult(
             uid=req.uid, tokens=np.asarray(out, np.int32),
-            n_generated=len(out), queue_delay=admit - req.arrival_time,
-            ttft=ttft, decode_seconds=now - admit, status=status,
+            n_generated=len(out), queue_delay=qd,
+            ttft=ttft, decode_seconds=spent, status=status,
             degraded=sched.degraded.pop(req.uid, None) is not None)
         results.append(res)
-        emit(logger, "finish", uid=req.uid, slot=slot,
-             shard=self._shard_of(slot), status=status, n=len(out),
-             ttft=ttft, tok_s=res.decode_tok_s)
+        self._emit("finish", uid=req.uid, slot=slot,
+                   shard=self._shard_of(slot), status=status, n=len(out),
+                   ttft=ttft, tok_s=res.decode_tok_s)
 
     def _abort_prefill(self, sched: SlotScheduler, slot: int) -> Request:
-        """Tear down a PREFILLING slot (cancel/deadline mid-lane)."""
+        """Tear down a PREFILLING slot (cancel/deadline/suspend mid-lane)."""
         self._drop_lane_cursor(slot)
         req = sched.release(slot)
         self.cache = self._reset(self.cache, jnp.int32(slot))
-        self._live[slot] = False
-        self._done[slot] = True
-        self._temp[slot] = 0.0
-        self._stop[slot] = -1
-        self._kv_armed[slot] = False
+        self._park_slot_flags(slot)
         return req
+
+    # -- slot snapshots: suspend / resume / preempt / migrate (§12) ---------
+
+    def _snap_dispatch(self, slot: int) -> Dict[str, Any]:
+        """Device->host batch-1 slice of ``slot`` (sharded override picks
+        the owner's row out of the shard-stacked extract)."""
+        return jax.device_get(self._snap(self.cache, jnp.int32(slot)))
+
+    def _restore_dispatch(self, slot: int, snap: SlotSnapshot) -> None:
+        """Scatter a snapshot's device payload into ``slot``.
+
+        The trimmed KV rows zero-pad back to slot capacity on the host
+        (pad rows sit beyond ``pos`` — masked out of attention and the
+        canary alike), then one ``write_cache_slot`` program commits the
+        whole slot: packed bytes verbatim, no dequant round trip.
+        """
+        solo = unpack_device_state(snap.device, slot_row_capacity(self.cache))
+        self.cache = self._restore_prog(self.cache, solo, jnp.int32(slot))
+
+    def _snapshot_slot(self, sched: SlotScheduler, state: Dict[int, Any],
+                       slot: int, clock) -> SlotSnapshot:
+        """READ-ONLY ``SlotSnapshot`` of a live DECODING slot.
+
+        Pure extraction — the slot keeps decoding undisturbed, which is
+        what lets ``checkpoint`` snapshot a running engine.  KV rows are
+        trimmed to ``min(pos, capacity)``: direct rows below an unwrapped
+        ring pointer, the whole ring once SWA has wrapped.
+        """
+        req = sched.active[slot]
+        solo = self._snap_dispatch(slot)
+        pos = int(np.asarray(solo["pos"])[0])
+        rows = slot_row_capacity(solo)
+        used = min(pos, rows) if rows is not None else 0
+        st = state[slot]
+        return SlotSnapshot(
+            req=req, pos=pos, used_rows=used,
+            device=pack_device_state(solo, used),
+            tok=int(self._tok[slot]), key=self._keys[slot].copy(),
+            n_gen=int(self._n_gen[slot]), max_new=int(self._max_new[slot]),
+            temp=float(self._temp[slot]), stop=int(self._stop[slot]),
+            out=list(st["out"]), queue_delay=st["queue_delay"],
+            ttft=st["ttft"],
+            decode_spent=st["decode_spent"] + (clock() - st["admit_time"]))
+
+    def snapshot_slot(self, slot: int) -> SlotSnapshot:
+        """Public read-only snapshot of a live slot (mid-serve, e.g. from
+        a ``progress_cb`` — migration-cost measurements use this)."""
+        if self._sched is None or slot not in self._sched.active:
+            raise ValueError(f"slot {slot} holds no live request")
+        return self._snapshot_slot(self._sched, self._state, slot,
+                                   self._clock)
+
+    def _suspend_slot(self, sched: SlotScheduler, state: Dict[int, Any],
+                      slot: int, clock, event: str = "suspend") -> None:
+        """Snapshot a DECODING slot and requeue its request as resumable."""
+        snap = self._snapshot_slot(sched, state, slot, clock)
+        req = sched.suspend_to_queue(slot, snap)
+        state.pop(slot, None)
+        self.cache = self._reset(self.cache, jnp.int32(slot))
+        self._park_slot_flags(slot)
+        self._emit(event, uid=req.uid, slot=slot,
+                   shard=self._shard_of(slot), n_gen=snap.n_gen,
+                   pos=snap.pos, nbytes=snap.nbytes)
+
+    def _resume(self, sched: SlotScheduler, state: Dict[int, Any],
+                slot: int, req: Request, snap: SlotSnapshot, clock,
+                event: str = "resume") -> None:
+        """Restore a snapshot into ``slot`` and rejoin the decode batch.
+
+        Every bit the decode chunk reads — KV rows, ring pointer, SSM
+        state, next token, PRNG key, budget counters, sampling vector —
+        comes back exactly as suspended, so the remaining stream is the
+        uninterrupted run's remaining stream.
+        """
+        self._restore_dispatch(slot, snap)
+        self._tok[slot] = snap.tok
+        self._keys[slot] = np.asarray(snap.key, np.uint32)
+        self._done[slot] = False
+        self._live[slot] = True
+        self._n_gen[slot] = snap.n_gen
+        self._max_new[slot] = snap.max_new
+        self._temp[slot] = snap.temp
+        self._stop[slot] = snap.stop
+        self._kv_armed[slot] = False
+        self._ssm_armed[slot] = False
+        sched.mark_decoding(slot)
+        state[slot] = {"admit_time": clock(), "out": list(snap.out),
+                       "prev_n_gen": snap.n_gen,
+                       "queue_delay": snap.queue_delay, "ttft": snap.ttft,
+                       "decode_spent": snap.decode_spent}
+        self._emit(event, uid=req.uid, slot=slot,
+                   shard=self._shard_of(slot), n_gen=snap.n_gen,
+                   pos=snap.pos)
+
+    def _resume_ready(self, sched: SlotScheduler, state: Dict[int, Any],
+                      clock) -> None:
+        """Drain policy-picked resumable requests into free slots.
+
+        Runs before lane/admission work each iteration: a resume is one
+        restore scatter, so it never waits behind a busy prefill lane.
+        """
+        now = clock()
+        while True:
+            adm = sched.next_resume(now)
+            if adm is None:
+                return
+            slot, req = adm
+            snap = sched.resumable.pop(req.uid)
+            self._resume(sched, state, slot, req, snap, clock)
+
+    def _preempt_sweep(self, sched: SlotScheduler, state: Dict[int, Any],
+                       clock) -> None:
+        """Apply the preemption policy at the chunk boundary."""
+        if self.preemption is None:
+            return
+        for slot in self.preemption.victims(sched, clock()):
+            self._suspend_slot(sched, state, slot, clock, event="preempt")
+
+    def drain_shard(self, shard: int) -> None:
+        """Take ``shard`` out of rotation (sharded engines only).
+
+        Honored at the next chunk boundary: live DECODING requests
+        migrate to healthy shards via snapshot restore, PREFILLING ones
+        requeue and restart their lane, and admission stops routing to
+        the shard.  The base engine has no shards to drain.
+        """
+        raise ValueError("drain_shard needs a sharded engine "
+                         "(ShardedContinuousEngine)")
+
+    # -- crash recovery: checkpoint / restore (§12) -------------------------
+
+    def checkpoint(self, path) -> Dict[str, Any]:
+        """Persist the running serve's resumable state to ``path``.
+
+        Callable mid-serve (from a ``progress_cb`` — i.e. at a chunk
+        boundary, the engine's only consistent point).  Captures every
+        live DECODING slot as a read-only ``SlotSnapshot`` (the slots
+        keep decoding), queued requests with their pending resume
+        snapshots, mid-prefill requests as plain restarts, results so
+        far, and the journal cursor.  The write is atomic
+        (write-then-rename), so a crash DURING checkpointing leaves the
+        previous checkpoint intact.  Restore with a FRESH engine's
+        ``restore(path)`` + ``serve``.
+        """
+        sched, state = self._sched, self._state
+        if sched is None:
+            raise RuntimeError("checkpoint() runs mid-serve — call it "
+                               "from a progress_cb")
+        snaps, restarts = [], []
+        for slot in list(sched.active):
+            if sched.phase.get(slot) == PREFILLING:
+                restarts.append(sched.active[slot])  # lane restarts chunk 0
+            else:
+                snaps.append(self._snapshot_slot(sched, state, slot,
+                                                 self._clock))
+        self._emit("checkpoint", path=str(path), live=len(snaps),
+                   queued=len(sched.queue), chunk=self._chunk_idx)
+        ck = {"version": 1, "cfg": self.cfg.name, "kv": self._kv,
+              "n_slots": self.n_slots, "max_len": self.max_len,
+              "seq": self.journal.seq, "chunk_idx": self._chunk_idx,
+              "snapshots": snaps, "prefilling": restarts,
+              "queued": list(sched.queue),
+              "resumable": dict(sched.resumable),
+              "results": list(self._results)}
+        save_checkpoint(path, ck)
+        return ck
+
+    def restore(self, path) -> Tuple[List[Request], List[RequestResult]]:
+        """Load a checkpoint into THIS (fresh) engine.
+
+        Returns ``(requests, prior_results)``: hand ``requests`` to
+        ``serve()`` — suspended-at-checkpoint requests resume from their
+        snapshots bit-identically, mid-prefill and queued ones admit
+        normally — and concatenate ``prior_results`` (requests already
+        finished before the checkpoint) with the new serve's results for
+        the complete set.  Arrival times are rebased to 0 (their waits
+        already happened; snapshots carry the realized timings).  The
+        journal cursor resumes where the checkpoint left it.
+        """
+        ck = load_checkpoint(path)
+        if ck["cfg"] != self.cfg.name or ck["kv"] != self._kv:
+            raise ValueError(
+                f"checkpoint was taken on cfg={ck['cfg']!r} kv={ck['kv']!r}"
+                f"; this engine is cfg={self.cfg.name!r} kv={self._kv!r}")
+        if ck["max_len"] > self.max_len:
+            raise ValueError(f"checkpoint max_len {ck['max_len']} exceeds "
+                             f"this engine's {self.max_len}")
+        self.journal.seq = ck["seq"]
+        self._pending_resume = dict(ck["resumable"])
+        reqs: List[Request] = []
+        for snap in ck["snapshots"]:
+            self._pending_resume[snap.req.uid] = snap
+            reqs.append(snap.req)
+        reqs.extend(ck["prefilling"])
+        reqs.extend(ck["queued"])
+        reqs = [dataclasses.replace(r, arrival_time=0.0) for r in reqs]
+        self._emit("restore", path=str(path), n=len(reqs),
+                   chunk=ck["chunk_idx"])
+        return reqs, list(ck["results"])
 
     def _lifecycle(self, sched: SlotScheduler, state: Dict[int, Any],
                    results: List[RequestResult], clock) -> None:
@@ -1139,6 +1589,21 @@ class ContinuousEngine:
                                   Status.DEADLINE_EXPIRED, now, results)
         for req in sched.enforce_bounds(now):
             self._unadmitted(sched, req, Status.SHED, now, results)
+        sus = set()
+        while self._suspend_uids:           # drain-safe vs concurrent adds
+            sus.add(self._suspend_uids.pop())
+        for uid in sus:
+            slot = next((s for s, r in sched.active.items()
+                         if r.uid == uid), None)
+            if slot is None:
+                continue                    # queued, unknown or finished
+            if sched.phase.get(slot) == PREFILLING:
+                req = self._abort_prefill(sched, slot)
+                sched.queue.append(req)     # restart the lane from chunk 0
+                self._emit("suspend", uid=uid, slot=slot,
+                           shard=self._shard_of(slot), resumable=False)
+            else:
+                self._suspend_slot(sched, state, slot, clock)
 
     def _quarantine(self, sched: SlotScheduler, state: Dict[int, Any],
                     results: List[RequestResult], bad, cause: Dict[int, str],
@@ -1155,37 +1620,34 @@ class ContinuousEngine:
         """
         for slot in [s for s in list(sched.active) if bad[s]]:
             req = sched.active[slot]
-            emit(logger, "quarantine", uid=req.uid, slot=slot,
-                 shard=self._shard_of(slot), cause=cause.get(slot),
-                 retries_left=req.retries, chunk=self._chunk_idx - 1)
+            self._emit("quarantine", uid=req.uid, slot=slot,
+                       shard=self._shard_of(slot), cause=cause.get(slot),
+                       retries_left=req.retries, chunk=self._chunk_idx - 1)
             st = state.pop(slot, None)
             sched.release(slot)
             self.cache = self._reset(self.cache, jnp.int32(slot))
-            self._live[slot] = False
-            self._done[slot] = True
-            self._temp[slot] = 0.0
-            self._stop[slot] = -1
-            self._kv_armed[slot] = False
+            self._park_slot_flags(slot)
             if req.retries > 0:
                 sched.submit(dataclasses.replace(req,
                                                  retries=req.retries - 1))
-                emit(logger, "requeue", uid=req.uid,
-                     retries_left=req.retries - 1)
+                self._emit("requeue", uid=req.uid,
+                           retries_left=req.retries - 1)
                 continue
             now = clock()
             out = st["out"] if st else []
-            admit = st["admit_time"] if st else now
-            ttft = (st["first_token_time"] - req.arrival_time) if st \
-                else float("inf")
+            ttft = st["ttft"] if st else float("inf")
+            qd = st["queue_delay"] if st else now - req.arrival_time
+            spent = (st["decode_spent"] + (now - st["admit_time"])) if st \
+                else 0.0
             res = RequestResult(
                 uid=req.uid, tokens=np.asarray(out, np.int32),
-                n_generated=len(out), queue_delay=admit - req.arrival_time,
-                ttft=ttft, decode_seconds=now - admit, status=Status.FAILED,
+                n_generated=len(out), queue_delay=qd,
+                ttft=ttft, decode_seconds=spent, status=Status.FAILED,
                 degraded=sched.degraded.pop(req.uid, None) is not None)
             results.append(res)
-            emit(logger, "finish", uid=req.uid, slot=slot,
-                 shard=self._shard_of(slot), status=Status.FAILED,
-                 n=len(out), ttft=ttft, tok_s=res.decode_tok_s)
+            self._emit("finish", uid=req.uid, slot=slot,
+                       shard=self._shard_of(slot), status=Status.FAILED,
+                       n=len(out), ttft=ttft, tok_s=res.decode_tok_s)
 
     # -- KV integrity canaries (opt-in: kv_integrity=True) ------------------
 
@@ -1198,22 +1660,45 @@ class ContinuousEngine:
         SWA rings break the immutability once a chunk can wrap
         (``pos + chunk > window``) — those slots disarm (best-effort,
         DESIGN.md §11) rather than false-positive.
+
+        Also the VERIFY point of the SSM at-rest canary: recurrent state
+        integrates inside a chunk, so instead of pinning it across the
+        decode, ``_ssm_rearm`` folds it right after each chunk and this
+        checks nothing moved the bits while the slot sat idle between
+        chunks (admission/resume/reset disarm their slots first).  The
+        trip is folded into this chunk's containment mask.
         """
-        pos = np.asarray(jax.device_get(self.cache["pos"]))
-        armed = self._live.copy()
-        w = self.cfg.sliding_window
-        if w:
-            armed &= pos + self.chunk <= w
-        self._kv_armed = armed
-        self._kv_upto = np.where(armed, pos, 0).astype(np.int32)
-        self._kv_sum = np.asarray(jax.device_get(
-            self._kv_check(self.cache, jnp.asarray(self._kv_upto))))
+        if self._has_attn_kv:
+            pos = np.asarray(jax.device_get(self.cache["pos"]))
+            armed = self._live.copy()
+            w = self.cfg.sliding_window
+            if w:
+                armed &= pos + self.chunk <= w
+            self._kv_armed = armed
+            self._kv_upto = np.where(armed, pos, 0).astype(np.int32)
+            self._kv_sum = np.asarray(jax.device_get(
+                self._kv_check(self.cache, jnp.asarray(self._kv_upto))))
+        if self._has_ssm:
+            cur = np.asarray(jax.device_get(self._ssm_check(self.cache)))
+            self._ssm_bad = (cur != self._ssm_sum) & self._ssm_armed \
+                & self._live
+        else:
+            self._ssm_bad[:] = False
 
     def _kv_verify(self):
         """(B,) bool: armed slots whose committed rows changed bits."""
+        if not self._has_attn_kv:
+            return np.zeros((self.n_slots,), bool)
         chk = np.asarray(jax.device_get(
             self._kv_check(self.cache, jnp.asarray(self._kv_upto))))
         return (chk != self._kv_sum) & self._kv_armed
+
+    def _ssm_rearm(self) -> None:
+        """Fold live slots' recurrent state post-chunk; arm for the next
+        ``_kv_refresh`` at-rest check."""
+        self._ssm_sum = np.asarray(jax.device_get(
+            self._ssm_check(self.cache)))
+        self._ssm_armed = self._live.copy()
 
     # -- fault injection (no-op without a plan) -----------------------------
 
@@ -1233,9 +1718,13 @@ class ContinuousEngine:
         ci = self._chunk_idx
         for i, f in plan.pending("delay", ci):
             plan.fire(i)
-            emit(logger, "fault", kind="delay", shard=f.shard,
-                 seconds=f.seconds, chunk=ci)
+            self._emit("fault", kind="delay", shard=f.shard,
+                       seconds=f.seconds, chunk=ci)
             time.sleep(f.seconds)
+        for i, f in plan.pending("shard_down", ci):
+            plan.fire(i)
+            self._emit("fault", kind="shard_down", shard=f.shard, chunk=ci)
+            self.drain_shard(f.shard)   # honored at the next boundary
         uid2slot = {r.uid: s for s, r in sched.active.items()}
         for i, f in plan.pending("nan_logits", ci):
             s = uid2slot.get(f.uid)
@@ -1243,8 +1732,8 @@ class ContinuousEngine:
                 continue
             plan.fire(i)
             poison[s] = True
-            emit(logger, "fault", kind="nan_logits", uid=f.uid, slot=s,
-                 chunk=ci)
+            self._emit("fault", kind="nan_logits", uid=f.uid, slot=s,
+                       chunk=ci)
         for i, f in plan.pending("kv_flip", ci):
             s = uid2slot.get(f.uid)
             if s is None or not self._live[s]:
@@ -1255,8 +1744,8 @@ class ContinuousEngine:
             plan.fire(i)
             self.cache = flip_kv_bytes(self.cache, s, n_rows, plan.rng(i),
                                        n_bytes=f.n_bytes)
-            emit(logger, "fault", kind="kv_flip", uid=f.uid, slot=s,
-                 n_bytes=f.n_bytes, chunk=ci)
+            self._emit("fault", kind="kv_flip", uid=f.uid, slot=s,
+                       n_bytes=f.n_bytes, chunk=ci)
         return poison
 
     def serve(self, requests: List[Request], progress_cb=None,
@@ -1286,7 +1775,8 @@ class ContinuousEngine:
             requests = fault_plan.apply_arrivals(requests)
         self._fault_plan = fault_plan
         self._chunk_idx = 0
-        self._cancel_uids.clear()   # stale cancels target a PAST serve
+        self._cancel_uids.clear()   # stale cancels/suspends target a
+        self._suspend_uids.clear()  # PAST serve
         sched = self._make_sched()
         for r in requests:
             # reject overflow up front: a full-cache slot would clamp-write
@@ -1318,16 +1808,24 @@ class ContinuousEngine:
         self._park_lane()
         self._live[:] = False
         self._done[:] = True
+        self._kv_armed[:] = False
+        self._ssm_armed[:] = False
         t0 = time.time()
         clock = lambda: time.time() - t0   # noqa: E731  (virtual now)
         state: Dict[int, Dict[str, Any]] = {}
         results: List[RequestResult] = []
         chunked = self.prefill_mode == "chunked"
+        # expose the live serve to progress_cb-driven introspection
+        # (checkpoint(), snapshot_slot(), drain sweeps)
+        self._sched, self._state = sched, state
+        self._results, self._clock = results, clock
 
         while True:
             self._lifecycle(sched, state, results, clock)
             if not sched.has_work:
                 break
+            self._preempt_sweep(sched, state, clock)
+            self._resume_ready(sched, state, clock)
             now = clock()
             if chunked:
                 self._advance_lane(sched, state, clock)
@@ -1374,6 +1872,12 @@ class ContinuousEngine:
                 for s in np.nonzero(kv_bad & ~bad)[0]:
                     cause[int(s)] = "kv_integrity"
                 bad = bad | kv_bad
+                # SSM at-rest trip (computed pre-chunk in _kv_refresh):
+                # the idle-window corruption poisoned THIS chunk's scan
+                ssm_bad = self._ssm_bad & self._live
+                for s in np.nonzero(ssm_bad & ~bad)[0]:
+                    cause[int(s)] = "ssm_integrity"
+                bad = bad | ssm_bad
             if bad.any():
                 self._quarantine(sched, state, results, bad, cause, clock)
 
@@ -1387,7 +1891,10 @@ class ContinuousEngine:
                 if self._done[slot]:
                     self._finish_slot(sched, state, slot, Status.OK, now,
                                       results)
+            if self.kv_integrity and self._has_ssm:
+                self._ssm_rearm()
             if progress_cb is not None:
                 progress_cb(self, sched)
         self._fault_plan = None
+        self._sched = self._state = self._results = self._clock = None
         return results

@@ -38,7 +38,6 @@ drops their scatter rows; ``active=False`` gates their SSM writes).
 from __future__ import annotations
 
 import functools
-import logging
 from typing import Any, Dict
 
 import jax
@@ -48,17 +47,16 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.qtensor import QuantPolicy
 from repro.models import (init_cache, init_lane, prefill_chunk,
-                          prefill_into_slot, reset_slot)
+                          prefill_into_slot, read_cache_slot, reset_slot,
+                          write_cache_slot)
 from repro.models.common import ModelConfig
-from repro.models.kvcache import kv_slot_checksum
+from repro.models.kvcache import kv_slot_checksum, ssm_state_checksum
 from repro.sharding import (mesh_fingerprint, shard_map_manual,
                             slot_cache_specs)
 from .engine import cached_program
-from .events import emit
-from .scheduler import (ContinuousEngine, ShardedSlotScheduler,
-                        SlotScheduler)
-
-logger = logging.getLogger("repro.serving.scheduler")
+from .scheduler import (PREFILLING, ContinuousEngine,
+                        ShardedSlotScheduler, SlotScheduler)
+from .snapshot import take_owner_row
 
 _R = P()            # replicated
 _Pd = P("data")     # leading dim over the slot shards
@@ -108,6 +106,10 @@ class ShardedContinuousEngine(ContinuousEngine):
         self.mesh = mesh
         self.n_shards = s
         self.slots_per_shard = n_slots // s
+        # drain state persists across serve() calls: a shard taken down
+        # stays out of rotation until a new engine is built
+        self._drained: set = set()
+        self._drain_req: set = set()
         super().__init__(cfg, params, policy, n_slots=n_slots, **kw)
 
     # -- placement ----------------------------------------------------------
@@ -193,16 +195,53 @@ class ShardedContinuousEngine(ContinuousEngine):
         self._chunk_jit = cached_program(("cont_chunk", cfg, kv, mk),
                                          build_chunk)
 
-        if self.kv_integrity:
-            # the canary is per-slot arithmetic over the local cache
-            # slice — the manual body is the unsharded checksum verbatim
-            def kv_body(cache, upto):
-                return kv_slot_checksum(cfg, cache, upto)
+        def snap_body(cache, slot):
+            # every shard slices its local alias of the global slot; the
+            # out-specs stack the batch-1 slices along the batch axis and
+            # the host keeps the owner's row (snapshot.take_owner_row)
+            _, local, _ = _owner_apply(slot, nloc)
+            return read_cache_slot(cache, local)
 
-            self._kv_check = cached_program(
-                ("kv_check", cfg, kv, mk),
-                lambda: jax.jit(shard_map_manual(
-                    kv_body, mesh, in_specs=(cspec, _Pd), out_specs=_Pd)))
+        self._snap = cached_program(
+            ("snap", cfg, kv, mk, nloc),
+            lambda: jax.jit(shard_map_manual(
+                snap_body, mesh, in_specs=(cspec, _R), out_specs=cspec)))
+
+        def restore_body(cache, solo, slot):
+            # the restore scatter is admission's owner-masking applied to
+            # a replicated batch-1 payload: every shard runs the program,
+            # only the owner commits the rows
+            _, local, apply = _owner_apply(slot, nloc)
+            return write_cache_slot(cache, solo, local, apply=apply)
+
+        self._restore_prog = cached_program(
+            ("restore", cfg, kv, mk, nloc),
+            lambda: jax.jit(shard_map_manual(
+                restore_body, mesh, in_specs=(cspec, _R, _R),
+                out_specs=cspec)))
+
+        if self.kv_integrity:
+            # the canaries are per-slot arithmetic over the local cache
+            # slice — the manual bodies are the unsharded checksums
+            # verbatim
+            if self._has_attn_kv:
+                def kv_body(cache, upto):
+                    return kv_slot_checksum(cfg, cache, upto)
+
+                self._kv_check = cached_program(
+                    ("kv_check", cfg, kv, mk),
+                    lambda: jax.jit(shard_map_manual(
+                        kv_body, mesh, in_specs=(cspec, _Pd),
+                        out_specs=_Pd)))
+            if self._has_ssm:
+                def ssm_body(cache):
+                    return ssm_state_checksum(cfg, cache)
+
+                self._ssm_check = cached_program(
+                    ("ssm_check", cfg, mk),
+                    lambda: jax.jit(shard_map_manual(
+                        ssm_body, mesh, in_specs=(cspec,),
+                        out_specs=_Pd)))
 
     def _build_lane(self) -> None:
         cfg, kv, mesh, mk = self.cfg, self._kv, self.mesh, self._mesh_key
@@ -288,13 +327,95 @@ class ShardedContinuousEngine(ContinuousEngine):
     # -- host loop deltas ----------------------------------------------------
 
     def _make_sched(self) -> SlotScheduler:
-        return ShardedSlotScheduler(self.n_shards, self.slots_per_shard,
-                                    policy=self.admission_policy,
-                                    max_queue=self.max_queue,
-                                    shedding=self.shedding)
+        sched = ShardedSlotScheduler(self.n_shards, self.slots_per_shard,
+                                     policy=self.admission_policy,
+                                     max_queue=self.max_queue,
+                                     shedding=self.shedding,
+                                     journal=self.journal)
+        self._seed_sched(sched)
+        return sched
+
+    def _seed_sched(self, sched: SlotScheduler) -> None:
+        super()._seed_sched(sched)
+        sched.drained |= self._drained
 
     def _shard_of(self, slot: int):
         return slot // self.slots_per_shard
+
+    def _snap_dispatch(self, slot: int) -> Dict[str, Any]:
+        stacked = jax.device_get(self._snap(self.cache, jnp.int32(slot)))
+        return take_owner_row(stacked, slot // self.slots_per_shard)
+
+    # -- shard drain & live migration (§12) ---------------------------------
+
+    def drain_shard(self, shard: int) -> None:
+        """Take ``shard`` out of rotation at the next chunk boundary.
+
+        Its live DECODING requests snapshot-migrate onto healthy shards'
+        free slots (suspend-to-queue when none is free — they resume as
+        capacity opens), mid-prefill requests abort their lane and
+        requeue plain, and the scheduler stops routing admissions there.
+        Validated at CALL time: draining the last healthy shard is
+        refused loudly rather than discovered mid-sweep.  Safe to call
+        mid-serve (``progress_cb``, fault injection) — same chunk-
+        boundary contract as ``cancel``/``suspend``.
+        """
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"no shard {shard} "
+                             f"(n_shards={self.n_shards})")
+        healthy_after = (set(range(self.n_shards)) - self._drained
+                         - self._drain_req - {shard})
+        if not healthy_after:
+            raise ValueError(f"draining shard {shard} would leave no "
+                             f"healthy shards")
+        self._drain_req.add(shard)
+
+    def _migration_target(self, sched) -> Any:
+        """Least-loaded healthy shard's first free slot (None if full)."""
+        healthy = {sched.shard_of(s) for s in sched.free} - sched.drained
+        if not healthy:
+            return None
+        sh = min(healthy, key=lambda s: (sched.load(s), s))
+        return sched.free_on(sh)[0]
+
+    def _drain_sweep(self, sched, state, results, clock) -> None:
+        while self._drain_req:              # drain-safe vs concurrent adds
+            shard = self._drain_req.pop()
+            if shard in self._drained:
+                continue
+            self._drained.add(shard)
+            sched.drained.add(shard)
+            self._emit("drain", shard=shard, live=sched.load(shard),
+                       chunk=self._chunk_idx)
+            lo = shard * self.slots_per_shard
+            for slot in range(lo, lo + self.slots_per_shard):
+                if slot not in sched.active:
+                    continue
+                if sched.phase.get(slot) == PREFILLING:
+                    # a mid-prefill slot has no resumable state (§12):
+                    # abort the lane, requeue, restart from chunk 0
+                    req = self._abort_prefill(sched, slot)
+                    sched.queue.append(req)
+                    self._emit("suspend", uid=req.uid, slot=slot,
+                               shard=shard, resumable=False)
+                    continue
+                tgt = self._migration_target(sched)
+                if tgt is None:
+                    # no healthy free slot: park resumable, the resume
+                    # drain picks it up as capacity opens
+                    self._suspend_slot(sched, state, slot, clock)
+                    continue
+                snap = self._snapshot_slot(sched, state, slot, clock)
+                req = sched.reassign(slot, tgt)
+                state.pop(slot, None)
+                self.cache = self._reset(self.cache, jnp.int32(slot))
+                self._park_slot_flags(slot)
+                self._resume(sched, state, tgt, req, snap, clock,
+                             event="migrate")
+
+    def _lifecycle(self, sched, state, results, clock) -> None:
+        super()._lifecycle(sched, state, results, clock)
+        self._drain_sweep(sched, state, results, clock)
 
     def _drop_lane_cursor(self, slot: int) -> None:
         self._pf = {sh: pf for sh, pf in self._pf.items()
@@ -337,7 +458,8 @@ class ShardedContinuousEngine(ContinuousEngine):
         now = clock()
         while True:
             idle = [s for s in range(self.n_shards)
-                    if s not in self._pf and sched.free_on(s)]
+                    if s not in self._pf and s not in sched.drained
+                    and sched.free_on(s)]
             if not idle:
                 break
             shard = min(idle, key=lambda s: (sched.load(s), s))
@@ -345,6 +467,10 @@ class ShardedContinuousEngine(ContinuousEngine):
             if adm is None:
                 break
             slot, req = adm
+            snap = sched.resumable.pop(req.uid, None)
+            if snap is not None:    # resume: no lane needed, keep going
+                self._resume(sched, state, slot, req, snap, clock)
+                continue
             self._pf[shard] = self._start_prefill(sched, slot, req, now,
                                                   shard=shard)
         if not self._pf:
@@ -385,9 +511,11 @@ class ShardedContinuousEngine(ContinuousEngine):
             self._arm_slot(slot, req, np.asarray(tok0)[shard],
                            np.asarray(keys)[shard])
             sched.mark_decoding(slot)
-            state[slot] = {"admit_time": pf["admit_time"],
-                           "first_token_time": clock(), "out": [],
-                           "prev_n_gen": 0}
-            emit(logger, "prefill-done", uid=req.uid, shard=shard,
-                 slot=slot, prompt=t,
-                 ttft=state[slot]["first_token_time"] - req.arrival_time)
+            state[slot] = {"admit_time": pf["admit_time"], "out": [],
+                           "prev_n_gen": 0,
+                           "queue_delay": (pf["admit_time"]
+                                           - req.arrival_time),
+                           "ttft": clock() - req.arrival_time,
+                           "decode_spent": 0.0}
+            self._emit("prefill-done", uid=req.uid, shard=shard,
+                       slot=slot, prompt=t, ttft=state[slot]["ttft"])
