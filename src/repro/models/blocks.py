@@ -308,3 +308,138 @@ def layer_decode(cfg: ModelConfig, p: Params, x, layer_cache, pos,
         y2, _ = moe_ffn_decode(cfg, p, h2)
         return x + y2, new_cache
     return x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# speculative verify body (Q candidate tokens, one batched forward)
+# ---------------------------------------------------------------------------
+
+def _attn_verify(cfg: ModelConfig, p: Params, h, layer_cache, pos,
+                 kv_fmt: Optional[str], prefix: str = "", live=None):
+    """h (B, Q, D) -> (attn out (B, Q, D), scratch attn cache, pending).
+
+    The speculative-verify attention: the q/k/v/o WEIGHT matmuls run once
+    over all Q candidate rows (one dequant per projection on the XLA
+    quantized path — the whole point of batching the verify), while the
+    write/attend inner loop scans the Q rows through the EXACT per-token
+    decode ops (``write_token`` + ``attend_decode`` at ``(B, 1)`` shapes),
+    so row i's attention output is bit-identical to what a sequential
+    ``decode_step`` at position ``pos + i`` would produce — including the
+    SWA ring-write order (row i lands before query i reads, rows > i do
+    not exist yet, exactly the sequential memory pattern).
+
+    The layer cache it returns has all Q rows written — the caller treats
+    it as SCRATCH and discards it; ``pending`` carries the post-rope f32
+    K/V rows (B, Q, KVH, hd) so ``commit_verify`` can re-write just the
+    accepted prefix through the same ``write_token`` gating (bit-identical
+    rows, rejected rows never touch the real cache).
+    """
+    b, qn, _ = h.shape
+    q, k1, v1 = gqa_project(cfg, p, h, prefix)
+    positions = (jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))[:, None]
+                 + jnp.arange(qn, dtype=jnp.int32)[None, :])
+    cos, sin = rope_freqs(positions, cfg.hd, cfg.rope_theta)
+    q = apply_rope(q.reshape(b, qn, -1, cfg.hd), cos, sin).reshape(q.shape)
+    k1 = apply_rope(k1, cos, sin)
+    kf = k1.astype(jnp.float32)
+    vf = v1.astype(jnp.float32)
+
+    def astep(cache_l, i):
+        ki = jax.lax.dynamic_slice_in_dim(kf, i, 1, axis=1)
+        vi = jax.lax.dynamic_slice_in_dim(vf, i, 1, axis=1)
+        cache_l = write_token(cfg, cache_l, ki, vi, pos + i, kv_fmt,
+                              live=live)
+        qi = jax.lax.dynamic_slice_in_dim(q, i, 1, axis=1)
+        qi = qi.reshape(b, cfg.n_heads, cfg.hd)
+        o = attend_decode(cfg, cache_l, qi, pos + i, kv_fmt)
+        return cache_l, o
+
+    scratch, os = jax.lax.scan(astep, layer_cache,
+                               jnp.arange(qn, dtype=jnp.int32))
+    o = os.transpose(1, 0, 2, 3).reshape(b, qn, cfg.n_heads * cfg.hd)
+    o = o.astype(h.dtype)
+    return dense(o, p[f"{prefix}wo"]), scratch, {"k": kf, "v": vf}
+
+
+def _ssm_verify(cfg: ModelConfig, p: Params, h, h0, conv0):
+    """h (B, Q, D) -> (out (B, Q, D), per-step states (B, Q, ...) stacked).
+
+    Q sequential ``mamba_step`` calls at the exact decode shapes — the
+    recurrence can't batch, and running the identical op keeps every step
+    bit-identical to sequential decode.  All intermediate states are
+    emitted so commit can jump each slot to the state after its own
+    accepted length.
+    """
+    def sstep(carry, i):
+        hh, cc = carry
+        hi = jax.lax.dynamic_slice_in_dim(h, i, 1, axis=1)
+        y, hf, conv = mamba_step(cfg, p, hi, hh, cc)
+        return (hf, conv), (y[:, 0], hf, conv)
+
+    qn = h.shape[1]
+    _, (ys, hs, convs) = jax.lax.scan(sstep, (h0, conv0),
+                                      jnp.arange(qn, dtype=jnp.int32))
+    # scan stacks on axis 0: (Q, B, ...) -> (B, Q, ...)
+    return (jnp.swapaxes(ys, 0, 1), jnp.swapaxes(hs, 0, 1),
+            jnp.swapaxes(convs, 0, 1))
+
+
+def layer_verify(cfg: ModelConfig, p: Params, x, layer_cache, pos,
+                 kind: str, kv_fmt: Optional[str], live=None):
+    """x (B, Q, D) -> (x, scratch layer_cache, pending commit entries).
+
+    One layer of the speculative VERIFY forward: Q candidate tokens per
+    slot at positions ``pos[b] + i`` flow through the layer in a single
+    batched pass — rmsnorm/projections/MLP over (B, Q, D) rows (row-
+    stable vs the (B, 1, D) decode shapes for B*Q >= 2), attention and
+    SSM recurrence through per-row scans of the exact decode ops.  The
+    returned cache is scratch (all Q rows written, caller discards);
+    ``pending`` holds what ``lm.commit_verify`` needs to land just the
+    accepted prefix: post-rope f32 K/V rows and per-step SSM states.
+
+    MoE is excluded: expert capacity is resolved per dispatch, so a
+    (B*Q)-token dispatch drops different tokens than Q single-token
+    dispatches — there is no bitwise-stable batched verify for it
+    (same reason MoE prefill is outside the chunked-vs-whole contract).
+    """
+    if kind in ("moe", "cross", "encdec"):
+        raise NotImplementedError(
+            f"speculative verify does not support kind={kind!r}")
+    scratch = dict(layer_cache) if layer_cache else {}
+    pending: Dict[str, Any] = {}
+    h = rmsnorm(x, p["ln1_scale"], cfg.norm_eps)
+
+    if kind == "ssm":
+        ys, hs, convs = _ssm_verify(cfg, p, h, layer_cache["h"],
+                                    layer_cache["conv"])
+        pending.update(h=hs, conv=convs)
+        scratch.update(h=_freeze_state(hs[:, -1], layer_cache["h"], live),
+                       conv=_freeze_state(convs[:, -1], layer_cache["conv"],
+                                          live))
+        return x + ys, scratch, pending
+
+    if kind == "hybrid":
+        attn_cache = {n: layer_cache[n] for n in layer_cache
+                      if not n.startswith(("h", "conv"))}
+        attn_y, attn_scratch, attn_pend = _attn_verify(
+            cfg, p, h, attn_cache, pos, kv_fmt, live=live)
+        ys, hs, convs = _ssm_verify(cfg, p, h, layer_cache["h"],
+                                    layer_cache["conv"])
+        pending.update(attn_pend, h=hs, conv=convs)
+        scratch.update(attn_scratch)
+        scratch.update(h=_freeze_state(hs[:, -1], layer_cache["h"], live),
+                       conv=_freeze_state(convs[:, -1], layer_cache["conv"],
+                                          live))
+        x = x + 0.5 * (attn_y + ys)
+        h2 = rmsnorm(x, p["ln2_scale"], cfg.norm_eps)
+        return (x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"]),
+                scratch, pending)
+
+    y, attn_scratch, attn_pend = _attn_verify(cfg, p, h, layer_cache, pos,
+                                              kv_fmt, live=live)
+    pending.update(attn_pend)
+    scratch.update(attn_scratch)
+    x = x + y
+    h2 = rmsnorm(x, p["ln2_scale"], cfg.norm_eps)
+    return (x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"]),
+            scratch, pending)

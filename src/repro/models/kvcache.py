@@ -203,23 +203,35 @@ def write_token(cfg: ModelConfig, layer_cache, k1, v1, pos,
             "v_meta": upd(layer_cache["v_meta"], vm)}
 
 
-def kv_slot_checksum(cfg: ModelConfig, cache, upto):
-    """(B,) uint32 canary over each slot's KV rows ``[0, upto[b])``.
+def kv_slot_checksum(cfg: ModelConfig, cache, upto, horizon=None):
+    """(B,) uint32 canary over each slot's LIVE, about-to-be-stable KV rows.
 
     The failure-containment primitive (DESIGN.md §11): decode APPENDS at
-    ``pos`` and never rewrites earlier rows (outside an SWA ring wrap),
-    so a slot's prefix rows are immutable across a decode chunk — a
-    checksum computed before the chunk must match after it, or the slot's
-    cache was corrupted.  The fold is ``core.pack.byte_fold`` per
+    ``pos``, so the rows a chunk does NOT write are immutable across it —
+    a checksum computed before the chunk must match after it, or the
+    slot's cache was corrupted.  The fold is ``core.pack.byte_fold`` per
     (layer, slot, row) — bit-exact over packed uint8/uint16 buffers and
     bitcast bf16 alike — combined with odd per-row weights, so a flipped
     byte OR two swapped rows both change the canary.
 
-    ``upto`` is (B,) int32; slots with ``upto[b] == 0`` contribute the
-    trivially stable 0 (mid-prefill and parked slots).  Caches without
-    attention KV leaves (pure-SSM families) return zeros — integrity
-    there is vacuous, not checked.  Runs unchanged per shard under the
-    slot-sharded manual shard_map (no cross-slot terms).
+    ``upto`` is (B,) int32 (each slot's ``pos``); slots with
+    ``upto[b] == 0`` contribute the trivially stable 0 (mid-prefill and
+    parked slots).  With ``horizon=None`` the fold covers the append-only
+    prefix ``[0, upto)`` — correct until an SWA ring wraps, at which
+    point the "prefix" is no longer immutable.  ``horizon`` (scalar or
+    (B,), the max rows the next chunk may write per slot) makes the fold
+    WINDOW-AWARE: it covers the occupied rows (``row < min(upto, S)`` —
+    the whole ring once wrapped) MINUS the rows within ``horizon`` of
+    the write pointer in ring distance (``(row - upto) mod S``), i.e.
+    exactly the rows a healthy chunk cannot touch.  Unwrapped slots with
+    ``upto + horizon <= S`` exclude nothing — the horizon mask reduces
+    to the plain prefix — so wrapped SWA slots stay ARMED instead of
+    being disarmed wholesale (the pre-fix behavior).  ``horizon >= S``
+    excludes every row (vacuous canary — callers should disarm).
+
+    Caches without attention KV leaves (pure-SSM families) return zeros
+    — integrity there is vacuous, not checked.  Runs unchanged per shard
+    under the slot-sharded manual shard_map (no cross-slot terms).
     """
     b = cache["pos"].shape[0]
     total = jnp.zeros((b,), jnp.uint32)
@@ -227,6 +239,8 @@ def kv_slot_checksum(cfg: ModelConfig, cache, upto):
     if layers is None:
         return total
     upto = jnp.asarray(upto, jnp.int32)
+    hz = None if horizon is None else jnp.broadcast_to(
+        jnp.asarray(horizon, jnp.int32), (b,))
     for name in _KV_LEAVES:
         leaf = layers.get(name)
         if leaf is None:
@@ -234,7 +248,14 @@ def kv_slot_checksum(cfg: ModelConfig, cache, upto):
         f = byte_fold(leaf, 3)                          # (L, B, S)
         s = leaf.shape[2]
         rw = 2 * jnp.arange(s, dtype=jnp.uint32) + 1
-        mask = (jnp.arange(s)[None, :] < upto[:, None]).astype(jnp.uint32)
+        r = jnp.arange(s, dtype=jnp.int32)[None, :]
+        if hz is None:
+            mask = r < upto[:, None]
+        else:
+            occupied = r < jnp.minimum(upto, s)[:, None]
+            dist = jnp.mod(r - upto[:, None], s)        # ring distance
+            mask = occupied & (dist >= hz[:, None])
+        mask = mask.astype(jnp.uint32)
         total = total + jnp.sum(f * rw[None, None, :] * mask[None],
                                 axis=(0, 2), dtype=jnp.uint32)
     return total

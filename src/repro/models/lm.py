@@ -15,10 +15,10 @@ import jax.numpy as jnp
 
 from .attention import memory_kv
 from .blocks import (init_layer, layer_decode, layer_forward,
-                     layer_prefill_chunk)
+                     layer_prefill_chunk, layer_verify)
 from .common import (ModelConfig, dense, gated_update_slice, ninit, rmsnorm,
                      split_keys)
-from .kvcache import ssm_cache_init, write_prefill
+from .kvcache import ssm_cache_init, write_prefill, write_token
 
 Params = Dict[str, Any]
 
@@ -455,6 +455,137 @@ def decode_loop(cfg: ModelConfig, params: Params, tok, cache, n_steps: int,
     return toks.T, tok, cache, key, aux
 
 
+# ---------------------------------------------------------------------------
+# self-speculative decoding: draft (cheap weights) / verify (target weights)
+# ---------------------------------------------------------------------------
+
+def draft_loop(cfg: ModelConfig, draft_params: Params, tok, cache,
+               n_steps: int, kv_fmt: Optional[str], sample_fn, key,
+               split_fn=jax.random.split, live=None, with_logits=False):
+    """Draft ``n_steps`` candidate tokens per slot WITHOUT committing KV.
+
+    Runs the regular ``decode_loop`` scan over the DRAFT weights on a
+    functional copy of the cache and simply discards the returned cache —
+    JAX immutability makes the rollback free (no rejected draft row ever
+    reaches the caller's buffers, including SWA ring writes and SSM state
+    integration, which stay internally consistent inside the discarded
+    copy).  The returned tokens are the candidates c_1..c_k entering
+    ``verify_step``; the caller's cache and ``pos`` are untouched.
+
+    ``with_logits`` additionally returns the per-step draft logits
+    ((n_steps, B, V) f32) via the probe hook — residual-rejection
+    sampling needs the draft distribution at each candidate.
+
+    Returns ``(cands (B, n_steps), key[, draft_logits])``.
+    """
+    out = decode_loop(cfg, draft_params, tok, cache, n_steps, kv_fmt,
+                      sample_fn, key, split_fn=split_fn, live=live,
+                      probe_fn=(lambda lg: lg) if with_logits else None)
+    if with_logits:
+        toks, last, _, key, logits = out
+    else:
+        toks, last, _, key = out
+    # decode_loop emits the ENTERING token each step; the candidates are
+    # the sampled successors: steps 1.. plus the final sampled token
+    cands = jnp.concatenate([toks[:, 1:], last[:, None]], axis=1)
+    if with_logits:
+        return cands, key, logits
+    return cands, key
+
+
+def verify_step(cfg: ModelConfig, params: Params, tokens, cache,
+                kv_fmt: Optional[str], live=None):
+    """Score Q candidate rows per slot in ONE batched target-width forward.
+
+    ``tokens`` (B, Q) holds rows [c_0, c_1, .., c_{Q-1}] — the last
+    committed token followed by the draft candidates — consumed at
+    positions ``pos[b] .. pos[b]+Q-1``.  Row i's logits are bit-identical
+    to what a sequential ``decode_step`` would produce after committing
+    rows < i (the batched weight matmuls are row-stable and the
+    write/attend inner loop runs the exact decode ops per row — see
+    ``blocks.layer_verify``), so greedy acceptance can only ever emit the
+    same tokens the non-speculative engine would.
+
+    The caller's cache is NOT modified: all cache writes land in a
+    discarded scratch copy.  Returns ``(logits (B, Q, V) f32, pending)``;
+    feed ``pending`` with per-slot accept lengths to ``commit_verify``.
+    """
+    pos = cache["pos"]
+    x = _embed(cfg, params, tokens)
+    fam = cfg.family
+    if fam not in _KIND:
+        raise NotImplementedError(f"speculative verify: family {fam!r}")
+    kind = _KIND[fam]
+
+    def body(h, xs):
+        lp, lc = xs
+        h, scratch, pend = layer_verify(cfg, lp, h, lc, pos, kind, kv_fmt,
+                                        live=live)
+        return h, (scratch, pend)
+
+    x, (_, pending_layers) = jax.lax.scan(
+        body, x, (params["layers"], cache["layers"]))
+    logits = _head(cfg, params, x)                               # (B, Q, V)
+    return logits, {"layers": pending_layers}
+
+
+def commit_verify(cfg: ModelConfig, cache, pending, n_commit,
+                  kv_fmt: Optional[str], live=None):
+    """Land each slot's accepted prefix; rejected rows are never written.
+
+    ``n_commit`` (B,) int32 in [0, Q]: rows [pos, pos + n_commit) per slot
+    receive the target-weight K/V from ``pending`` through the same
+    value-gated ``write_token`` the sequential decode path uses (same
+    per-row quantization — committed bytes are bit-identical to a
+    non-speculative run), SSM state jumps to the post-``n_commit`` step
+    state, and ``pos`` advances by each slot's own accepted length.
+    Slots with ``n_commit == 0`` or ``live == False`` are untouched.
+    """
+    pos = cache["pos"]
+    b = pos.shape[0]
+    n_commit = jnp.asarray(n_commit, jnp.int32)
+    live_b = (jnp.ones((b,), bool) if live is None
+              else jnp.asarray(live, bool))
+    commit_any = live_b & (n_commit > 0)
+
+    def body(_, xs):
+        lc, pend = xs
+        nc = dict(lc)
+        if "k" in pend:
+            attn = {n: lc[n] for n in lc
+                    if not n.startswith(("h", "conv", "mem_"))}
+            qn = pend["k"].shape[1]
+
+            def wstep(c, i):
+                gate = live_b & (i < n_commit)
+                ki = jax.lax.dynamic_slice_in_dim(pend["k"], i, 1, axis=1)
+                vi = jax.lax.dynamic_slice_in_dim(pend["v"], i, 1, axis=1)
+                return write_token(cfg, c, ki, vi, pos + i, kv_fmt,
+                                   live=gate), None
+
+            attn, _ = jax.lax.scan(wstep, attn,
+                                   jnp.arange(qn, dtype=jnp.int32))
+            nc.update(attn)
+        if "h" in pend:
+            qn = pend["h"].shape[1]
+            idx = jnp.clip(n_commit - 1, 0, qn - 1)
+
+            def sel(stacked, old):
+                ix = idx.reshape((b,) + (1,) * (stacked.ndim - 1))
+                new = jnp.take_along_axis(stacked, ix, axis=1)[:, 0]
+                keep = commit_any.reshape((b,) + (1,) * (old.ndim - 1))
+                return jnp.where(keep, new.astype(old.dtype), old)
+
+            nc.update(h=sel(pend["h"], lc["h"]),
+                      conv=sel(pend["conv"], lc["conv"]))
+        return None, nc
+
+    _, new_layers = jax.lax.scan(body, None,
+                                 (cache["layers"], pending["layers"]))
+    new_pos = pos + jnp.where(live_b, n_commit, 0)
+    return dict(cache, layers=new_layers, pos=new_pos)
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                kv_fmt: Optional[str], pos_value: int = 0) -> Dict[str, Any]:
     """Allocate a CONCRETE zeroed cache (the continuous engine's arena).
@@ -580,8 +711,8 @@ def prefill_into_slot(cfg: ModelConfig, params: Params,
     and logits are bit-identical to serving it alone), then its cache is
     scattered into the slot. Returns (last logits (1, V), new cache).
     ``apply`` (traced bool) gates the scatter only — the sharded engine
-    runs the prefill replicated on every shard and lets the slot's owner
-    alone commit the merge.
+    runs this under a per-shard cond (owner-only admission) and lets the
+    slot's owner alone commit the merge.
     """
     assert batch["tokens"].shape[0] == 1, batch["tokens"].shape
     logits, solo = prefill(cfg, params, batch, max_len, kv_fmt)

@@ -9,6 +9,7 @@ from .scheduler import (AdmissionPolicy, ContinuousEngine, DegradeOverBudget,
                         Status, TtftDeadline)
 from .sharded import ShardedContinuousEngine
 from .snapshot import SlotSnapshot, load_checkpoint, save_checkpoint
+from .speculative import SpeculativeConfig
 
 __all__ = ["ServeEngine", "GenerationResult", "ContinuousEngine",
            "ShardedContinuousEngine", "Request", "RequestResult", "Status",
@@ -16,6 +17,7 @@ __all__ = ["ServeEngine", "GenerationResult", "ContinuousEngine",
            "FifoPolicy", "ShortestPromptFirst", "TtftDeadline",
            "PriorityAdmission", "PreemptionPolicy", "PriorityPreemption",
            "SheddingPolicy", "RejectNew", "DropOldest", "DegradeOverBudget",
-           "Fault", "FaultPlan", "SlotSnapshot", "save_checkpoint",
+           "Fault", "FaultPlan", "SpeculativeConfig", "SlotSnapshot",
+           "save_checkpoint",
            "load_checkpoint", "Journal", "replay", "EVENT_KINDS",
            "emit", "parse_event"]

@@ -31,7 +31,7 @@ __all__ = ["emit", "parse_event", "Journal", "replay", "EVENT_KINDS"]
 EVENT_KINDS = ("admit", "prefill-start", "prefill-done", "degrade",
                "shed", "expire", "cancel", "fault", "quarantine",
                "requeue", "finish", "suspend", "resume", "preempt",
-               "migrate", "drain", "checkpoint", "restore")
+               "migrate", "drain", "checkpoint", "restore", "spec-k")
 
 
 def emit(logger, event: str, **fields) -> None:

@@ -59,7 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.qtensor import QuantPolicy, direct_cast_tree
+from repro.core.qtensor import QuantPolicy, dense_like, direct_cast_tree
 from repro.kernels.ops import quantize_qtensor
 from repro.models import (decode_loop, init_cache, init_lane, prefill_chunk,
                           prefill_into_slot, read_cache_slot, reset_slot,
@@ -72,6 +72,8 @@ from .faults import flip_kv_bytes
 from .snapshot import (SlotSnapshot, load_checkpoint, pack_device_state,
                        save_checkpoint, slot_row_capacity,
                        unpack_device_state)
+from .speculative import AdaptiveK, SpeculativeConfig, pack_emissions, \
+    spec_round
 
 logger = logging.getLogger("repro.serving.scheduler")
 
@@ -704,17 +706,48 @@ class ContinuousEngine:
                  kv_integrity: bool = False,
                  max_queue: Optional[int] = None,
                  shedding: Optional[SheddingPolicy] = None,
-                 preemption: Optional[PreemptionPolicy] = None):
+                 preemption: Optional[PreemptionPolicy] = None,
+                 speculative: Optional[SpeculativeConfig] = None):
         self.cfg = cfg
         self.policy = policy
         self.n_slots = n_slots
         self.max_len = max_len
         self.chunk = chunk
+        raw_params = params
         params = (direct_cast_tree(params, policy,
                                    quantize_fn=quantize_qtensor)
                   if policy.weight_fmt else params)
         kv = policy.kv_fmt
         self._kv = kv
+        self.speculative = speculative
+        draft = None
+        if speculative is not None:
+            # MoE is outside the speculative contract: expert capacity is
+            # resolved per dispatch, so a (B, k+1)-token verify drops
+            # different tokens than k+1 single-token dispatches — no
+            # bitwise-stable batched scoring (same reason MoE prefill is
+            # outside the chunked-vs-whole oracle)
+            if cfg.family not in ("dense", "ssm", "hybrid"):
+                raise ValueError(f"speculative decode does not serve "
+                                 f"family={cfg.family!r}")
+            if speculative.draft == "recycled":
+                if not policy.weight_fmt:
+                    raise ValueError(
+                        "draft='recycled' dequantizes the engine's cast "
+                        "weights — it needs a quantized product "
+                        "(policy.weight_fmt)")
+                draft = dense_like(params)
+            else:
+                draft = direct_cast_tree(
+                    raw_params,
+                    dataclasses.replace(policy,
+                                        weight_fmt=speculative.draft),
+                    quantize_fn=quantize_qtensor)
+            self._adaptive = AdaptiveK(speculative, n_slots)
+            self.spec_accepted = 0      # candidates accepted (all chunks)
+            self.spec_offered = 0       # candidates offered (all chunks)
+            self._spec_acc_slot = np.zeros((n_slots,), np.int64)
+            self._spec_off_slot = np.zeros((n_slots,), np.int64)
         self.admission_policy = admission_policy
         assert prefill_mode in ("whole", "chunked"), prefill_mode
         self.prefill_mode = prefill_mode
@@ -734,6 +767,7 @@ class ContinuousEngine:
         self._kv_armed = np.zeros((n_slots,), bool)
         self._kv_sum = np.zeros((n_slots,), np.uint32)
         self._kv_upto = np.zeros((n_slots,), np.int32)
+        self._kv_horizon = chunk
         self._ssm_armed = np.zeros((n_slots,), bool)
         self._ssm_sum = np.zeros((n_slots,), np.uint32)
         self._ssm_bad = np.zeros((n_slots,), bool)
@@ -751,6 +785,8 @@ class ContinuousEngine:
         # must never hand each other executables (ISSUE-5)
         self._mesh_key = self._mesh_fingerprint()
         self.params = self._place_params(params)
+        self.draft_params = (self._place_params(draft)
+                             if draft is not None else None)
         self._build_programs()
         self._pf: Optional[Any] = None      # in-flight lane cursor(s)
         self.cache = self._init_slot_cache()
@@ -821,6 +857,13 @@ class ContinuousEngine:
             lambda: jax.jit(
                 functools.partial(self._chunk_fn, cfg=cfg, kv_fmt=kv),
                 static_argnames=("n_steps", "greedy")))
+        if self.speculative is not None:
+            self._spec_jit = cached_program(
+                ("spec_chunk", cfg, kv, mk),
+                lambda: jax.jit(
+                    functools.partial(self._spec_chunk_fn, cfg=cfg,
+                                      kv_fmt=kv),
+                    static_argnames=("k", "n_rounds", "greedy")))
         # snapshot extract/restore: one fixed-shape program each (slot is
         # a traced index), shared by suspend, migration and checkpoint
         self._snap = cached_program(
@@ -1064,6 +1107,59 @@ class ContinuousEngine:
                                                     stop, max_new)
         return emitted, tok, cache, keys, done, n_gen, finite
 
+    @staticmethod
+    def _spec_chunk_fn(params, draft_params, tok, cache, keys, done,
+                       n_gen, max_new, temperature, stop, live, poison,
+                       spec_k, *, cfg, kv_fmt, k: int, n_rounds: int,
+                       greedy: bool):
+        """The speculative decode chunk: ``n_rounds`` draft/verify/commit
+        rounds in one dispatch (DESIGN.md §13).
+
+        Each round (``serving.speculative.spec_round``) drafts ``k``
+        candidates per live slot with the DRAFT weights, scores all
+        ``k+1`` rows in one TARGET-weight forward, and commits only the
+        accepted prefix — each slot advances by its OWN ``n_accept + 1``,
+        which is exactly the ragged per-slot `pos` plumbing the engine
+        already runs on.  Emission/stop/budget semantics are the
+        non-speculative chunk's, applied round-by-round, and the ragged
+        per-round emissions are left-packed (``pack_emissions``) into
+        the contiguous per-slot prefix the harvest loop reads.  ``k``
+        and ``n_rounds`` are static (one program per distinct round
+        length — the adaptive controller halves/doubles, keeping the set
+        logarithmic); ``spec_k`` (B,) caps acceptance per slot WITHOUT
+        retracing.  The two extra outputs are the adaptive-k signal:
+        per-slot accepted and offered candidate counts for the chunk.
+
+        The chunk's emitted width is ``n_rounds * (k+1)`` — at least
+        ``chunk`` when rounds fully accept, and never read beyond each
+        slot's ``n_gen`` delta by the host.  Rows are independent end to
+        end (draft, verify and commit are per-slot), so the body runs
+        unchanged per shard under the fully-manual shard_map.
+        """
+        b = tok.shape[0]
+
+        def round_body(carry, _):
+            tok, cache, keys, done, n_gen, finite, acc, off = carry
+            live_r = ~done if live is None else (live & ~done)
+            (emitted, n_emit, tok, cache, keys, done, n_gen, fin_r,
+             a) = spec_round(
+                cfg, params, draft_params, tok, cache, keys, done,
+                n_gen, max_new, temperature, stop, live_r, poison,
+                spec_k, kv_fmt=kv_fmt, k=k, greedy=greedy)
+            acc = acc + jnp.where(live_r, a, 0)
+            off = off + jnp.where(live_r, jnp.minimum(spec_k, k), 0)
+            return (tok, cache, keys, done, n_gen, finite & fin_r, acc,
+                    off), (emitted, n_emit)
+
+        zero = jnp.zeros((b,), jnp.int32)
+        carry = (tok, cache, keys, done, n_gen, jnp.ones((b,), bool),
+                 zero, zero)
+        (tok, cache, keys, done, n_gen, finite, acc, off), \
+            (toks_r, n_r) = jax.lax.scan(round_body, carry, None,
+                                         length=n_rounds)
+        emitted = pack_emissions(toks_r, n_r)
+        return emitted, tok, cache, keys, done, n_gen, finite, acc, off
+
     # -- host loop ----------------------------------------------------------
 
     def _emit(self, event: str, **fields) -> None:
@@ -1081,6 +1177,8 @@ class ContinuousEngine:
         self._temp[slot] = req.temperature
         self._stop[slot] = -1 if req.stop_token is None else req.stop_token
         self._ssm_armed[slot] = False
+        if self.speculative is not None:
+            self._adaptive.arm(slot)
 
     def _park_slot_flags(self, slot: int) -> None:
         """Host flag parking for a slot leaving service (finish, abort,
@@ -1387,7 +1485,9 @@ class ContinuousEngine:
             temp=float(self._temp[slot]), stop=int(self._stop[slot]),
             out=list(st["out"]), queue_delay=st["queue_delay"],
             ttft=st["ttft"],
-            decode_spent=st["decode_spent"] + (clock() - st["admit_time"]))
+            decode_spent=st["decode_spent"] + (clock() - st["admit_time"]),
+            spec_k=(int(self._adaptive.k[slot])
+                    if self.speculative is not None else 0))
 
     def snapshot_slot(self, slot: int) -> SlotSnapshot:
         """Public read-only snapshot of a live slot (mid-serve, e.g. from
@@ -1430,6 +1530,10 @@ class ContinuousEngine:
         self._stop[slot] = snap.stop
         self._kv_armed[slot] = False
         self._ssm_armed[slot] = False
+        if self.speculative is not None:
+            # the learned draft length survives preempt/migrate/restore;
+            # pre-speculative snapshots (spec_k=0) re-arm at the default
+            self._adaptive.arm(slot, snap.spec_k)
         sched.mark_decoding(slot)
         state[slot] = {"admit_time": clock(), "out": list(snap.out),
                        "prev_n_gen": snap.n_gen,
@@ -1652,14 +1756,18 @@ class ContinuousEngine:
     # -- KV integrity canaries (opt-in: kv_integrity=True) ------------------
 
     def _kv_refresh(self) -> None:
-        """Checksum each live slot's committed KV rows before the chunk.
+        """Checksum each live slot's stable KV rows before the chunk.
 
-        Decode only APPENDS: rows ``[0, pos)`` are immutable through a
-        healthy decode chunk, so their position-weighted fold
-        (``kv_slot_checksum``) must read back identical afterwards.
-        SWA rings break the immutability once a chunk can wrap
-        (``pos + chunk > window``) — those slots disarm (best-effort,
-        DESIGN.md §11) rather than false-positive.
+        Decode only APPENDS: the rows the next chunk cannot write are
+        immutable through a healthy decode chunk, so their
+        position-weighted fold (``kv_slot_checksum``) must read back
+        identical afterwards.  The fold is WINDOW-AWARE: it covers each
+        slot's occupied rows minus the rows within the chunk's write
+        horizon of the ring pointer, so wrapped SWA slots stay armed
+        (the pre-fix code disarmed any slot whose window was about to
+        wrap, leaving long SWA requests unprotected for most of their
+        life).  Only a horizon spanning the whole ring (window <=
+        horizon) disarms — every row is then legitimately writable.
 
         Also the VERIFY point of the SSM at-rest canary: recurrent state
         integrates inside a chunk, so instead of pinning it across the
@@ -1671,13 +1779,16 @@ class ContinuousEngine:
         if self._has_attn_kv:
             pos = np.asarray(jax.device_get(self.cache["pos"]))
             armed = self._live.copy()
+            hz = self._chunk_horizon()
             w = self.cfg.sliding_window
-            if w:
-                armed &= pos + self.chunk <= w
+            if w and hz >= w:
+                armed[:] = False    # the whole ring is writable: vacuous
             self._kv_armed = armed
+            self._kv_horizon = hz
             self._kv_upto = np.where(armed, pos, 0).astype(np.int32)
             self._kv_sum = np.asarray(jax.device_get(
-                self._kv_check(self.cache, jnp.asarray(self._kv_upto))))
+                self._kv_check(self.cache, jnp.asarray(self._kv_upto),
+                               jnp.int32(hz))))
         if self._has_ssm:
             cur = np.asarray(jax.device_get(self._ssm_check(self.cache)))
             self._ssm_bad = (cur != self._ssm_sum) & self._ssm_armed \
@@ -1690,7 +1801,8 @@ class ContinuousEngine:
         if not self._has_attn_kv:
             return np.zeros((self.n_slots,), bool)
         chk = np.asarray(jax.device_get(
-            self._kv_check(self.cache, jnp.asarray(self._kv_upto))))
+            self._kv_check(self.cache, jnp.asarray(self._kv_upto),
+                           jnp.int32(self._kv_horizon))))
         return (chk != self._kv_sum) & self._kv_armed
 
     def _ssm_rearm(self) -> None:
@@ -1747,6 +1859,90 @@ class ContinuousEngine:
             self._emit("fault", kind="kv_flip", uid=f.uid, slot=s,
                        n_bytes=f.n_bytes, chunk=ci)
         return poison
+
+    # -- the decode dispatch (non-speculative or speculative) ---------------
+
+    def _spec_round_shape(self) -> Tuple[int, int]:
+        """(k, n_rounds) for the NEXT speculative dispatch.
+
+        The round length is the max live slot's ``spec_k`` (per-slot caps
+        ride the dispatch as a vector; the program is compiled per k),
+        and the round count keeps the worst-case full-accept advance
+        near the engine's configured ``chunk`` so spec and non-spec runs
+        admit/evict on comparable boundaries.
+        """
+        live = self._live & ~self._done
+        k = self._adaptive.round_k(live)
+        return k, max(1, self.chunk // (k + 1))
+
+    def _chunk_horizon(self) -> int:
+        """Max KV rows ONE slot may write in the next decode dispatch
+        (the integrity canary excludes ring rows inside this horizon)."""
+        if self.speculative is None:
+            return self.chunk
+        k, n_rounds = self._spec_round_shape()
+        return n_rounds * (k + 1)
+
+    def _dispatch_chunk(self, poison):
+        """Run one decode chunk and fold the results into host slot state.
+
+        Dispatches the speculative program when the engine was built with
+        ``speculative=`` (same argument row plus the draft weights and
+        the per-slot ``spec_k`` caps; same outputs plus the acceptance
+        counts that feed the adaptive-k controller), the plain chunk
+        otherwise.  Returns ``(emitted, finite)`` as host arrays — the
+        emitted width differs between the two paths (``chunk`` vs
+        ``n_rounds * (k+1)``), which the harvest loop never notices: it
+        reads each slot's ``n_gen`` delta off the packed prefix.
+        """
+        args = (jnp.asarray(self._tok), self.cache,
+                jnp.asarray(self._keys), jnp.asarray(self._done),
+                jnp.asarray(self._n_gen), jnp.asarray(self._max_new),
+                jnp.asarray(self._temp), jnp.asarray(self._stop),
+                self._decode_live(), jnp.asarray(poison))
+        greedy = bool((self._temp == 0.0).all())
+        if self.speculative is None:
+            (emitted, tok, self.cache, keys, done, n_gen,
+             finite) = self._chunk_jit(self.params, *args,
+                                       n_steps=self.chunk, greedy=greedy)
+            acc = off = None
+        else:
+            k, n_rounds = self._spec_round_shape()
+            (emitted, tok, self.cache, keys, done, n_gen, finite, acc,
+             off) = self._spec_jit(self.params, self.draft_params, *args,
+                                   jnp.asarray(self._adaptive.k), k=k,
+                                   n_rounds=n_rounds, greedy=greedy)
+        # one host transfer per chunk; copies (not views) because the
+        # admission path mutates these slotwise between chunks
+        got = jax.device_get((emitted, tok, keys, done, n_gen, finite)
+                             + (() if acc is None else (acc, off)))
+        emitted, tok, keys, done, n_gen, finite = got[:6]
+        self._tok = np.array(tok)
+        self._keys = np.array(keys, np.uint32)
+        self._done = np.array(done)
+        self._n_gen = np.array(n_gen)
+        if acc is not None:
+            acc, off = np.asarray(got[6]), np.asarray(got[7])
+            self.spec_accepted += int(acc.sum())
+            self.spec_offered += int(off.sum())
+            self._spec_acc_slot += acc.astype(np.int64)
+            self._spec_off_slot += off.astype(np.int64)
+            old_k = self._adaptive.k.copy()
+            self._adaptive.update(self._live, acc, off)
+            for s in np.nonzero(self._adaptive.k != old_k)[0]:
+                self._emit("spec-k", slot=int(s), k=int(self._adaptive.k[s]),
+                           ema=round(float(self._adaptive.ema[s]), 3),
+                           chunk=self._chunk_idx)
+        return emitted, np.asarray(finite)
+
+    def spec_stats(self) -> Dict[str, Any]:
+        """Aggregate speculative acceptance counters (benches read this)."""
+        if self.speculative is None:
+            raise ValueError("engine was built without speculative=")
+        off = max(self.spec_offered, 1)
+        return {"accepted": self.spec_accepted,
+                "offered": self.spec_offered,
+                "accept_rate": self.spec_accepted / off}
 
     def serve(self, requests: List[Request], progress_cb=None,
               fault_plan=None) -> List[RequestResult]:
@@ -1842,23 +2038,7 @@ class ContinuousEngine:
             if self.kv_integrity:
                 self._kv_refresh()
             poison = self._inject_faults(sched)
-            (emitted, tok, self.cache, keys, done, n_gen,
-             finite) = self._chunk_jit(
-                self.params, jnp.asarray(self._tok), self.cache,
-                jnp.asarray(self._keys), jnp.asarray(self._done),
-                jnp.asarray(self._n_gen), jnp.asarray(self._max_new),
-                jnp.asarray(self._temp), jnp.asarray(self._stop),
-                self._decode_live(), jnp.asarray(poison),
-                n_steps=self.chunk,
-                greedy=bool((self._temp == 0.0).all()))
-            # one host transfer per chunk; copies (not views) because the
-            # admission path mutates these slotwise between chunks
-            emitted, tok, keys, done, n_gen, finite = jax.device_get(
-                (emitted, tok, keys, done, n_gen, finite))
-            self._tok = np.array(tok)
-            self._keys = np.array(keys, np.uint32)
-            self._done = np.array(done)
-            self._n_gen = np.array(n_gen)
+            emitted, finite = self._dispatch_chunk(poison)
             self._chunk_idx += 1
             now = clock()
 

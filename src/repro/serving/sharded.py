@@ -137,17 +137,29 @@ class ShardedContinuousEngine(ContinuousEngine):
             lambda: init_cache(cfg, self.n_slots, max_len, kv)))
 
         def admit_body(params, batch, cache, slot, key, temperature):
-            # the batch-1 prefill runs REPLICATED (same inputs, same ops,
-            # same order on every shard — compute is wasted, bits are
-            # identical); only the owner commits the slot scatter
+            # owner-only prefill (ROADMAP pod-scale item): the batch-1
+            # prefill used to run REPLICATED on every shard (identical
+            # bits, S-1 shards' compute wasted).  Per-device control flow
+            # is legal under the fully-manual shard_map, so non-owners
+            # now take the cond's cheap branch — cache untouched, zero
+            # logits — and only the owner pays the prefill.  The host
+            # reads the owner's row of the stacked outputs, so the
+            # non-owner garbage tok0/key rows are never consumed.
             _, local, apply = _owner_apply(slot, nloc)
-            logits, new_cache = prefill_into_slot(
-                cfg, params, batch, cache, local, max_len, kv, apply=apply)
+
+            def owner(c):
+                return prefill_into_slot(cfg, params, batch, c, local,
+                                         max_len, kv, apply=apply)
+
+            def rider(c):
+                return jnp.zeros((1, cfg.vocab), jnp.float32), c
+
+            logits, new_cache = jax.lax.cond(apply, owner, rider, cache)
             tok0, key_out = ContinuousEngine._first_token(
                 logits, key, temperature)
-            # replicated scalars leave as a (S,)-stacked 'data' dim (all
-            # rows equal) — the host reads the owner's row; out_specs P()
-            # would need a replication proof the manual body can't give
+            # per-shard scalars leave as a (S,)-stacked 'data' dim — the
+            # host reads the owner's row; out_specs P() would need a
+            # replication proof the manual body can't give
             return tok0.reshape(1), key_out.reshape(1, 2), new_cache
 
         # nloc rides every key whose body closes over it: engines with a
@@ -195,6 +207,40 @@ class ShardedContinuousEngine(ContinuousEngine):
         self._chunk_jit = cached_program(("cont_chunk", cfg, kv, mk),
                                          build_chunk)
 
+        if self.speculative is not None:
+            # the speculative chunk body is the unsharded one, sliced:
+            # draft, verify and accept/commit are all per-slot (rows
+            # independent), so each shard runs its local slots' rounds
+            # and the greedy bitwise oracle carries over unchanged.
+            # Acceptance stats come back per-slot; the host aggregates
+            # per shard (``spec_shard_stats``).
+            spec_in = (_R, _R) + chunk_in[1:] + (_Pd,)
+            spec_out = chunk_out + (_Pd, _Pd)
+
+            def build_spec():
+                memo: Dict[Any, Any] = {}
+
+                def spec(params, draft, tok, cache, keys, done, n_gen,
+                         max_new, temp, stop, live, poison, spec_k, *,
+                         k: int, n_rounds: int, greedy: bool):
+                    fn = memo.get((k, n_rounds, greedy))
+                    if fn is None:
+                        body = functools.partial(
+                            ContinuousEngine._spec_chunk_fn, cfg=cfg,
+                            kv_fmt=kv, k=k, n_rounds=n_rounds,
+                            greedy=greedy)
+                        fn = memo[(k, n_rounds, greedy)] = jax.jit(
+                            shard_map_manual(body, mesh, in_specs=spec_in,
+                                             out_specs=spec_out))
+                    return fn(params, draft, tok, cache, keys, done,
+                              n_gen, max_new, temp, stop, live, poison,
+                              spec_k)
+
+                return spec
+
+            self._spec_jit = cached_program(("spec_chunk", cfg, kv, mk),
+                                            build_spec)
+
         def snap_body(cache, slot):
             # every shard slices its local alias of the global slot; the
             # out-specs stack the batch-1 slices along the batch axis and
@@ -225,13 +271,14 @@ class ShardedContinuousEngine(ContinuousEngine):
             # slice — the manual bodies are the unsharded checksums
             # verbatim
             if self._has_attn_kv:
-                def kv_body(cache, upto):
-                    return kv_slot_checksum(cfg, cache, upto)
+                def kv_body(cache, upto, horizon):
+                    return kv_slot_checksum(cfg, cache, upto,
+                                            horizon=horizon)
 
                 self._kv_check = cached_program(
                     ("kv_check", cfg, kv, mk),
                     lambda: jax.jit(shard_map_manual(
-                        kv_body, mesh, in_specs=(cspec, _Pd),
+                        kv_body, mesh, in_specs=(cspec, _Pd, _R),
                         out_specs=_Pd)))
             if self._has_ssm:
                 def ssm_body(cache):
@@ -345,6 +392,23 @@ class ShardedContinuousEngine(ContinuousEngine):
     def _snap_dispatch(self, slot: int) -> Dict[str, Any]:
         stacked = jax.device_get(self._snap(self.cache, jnp.int32(slot)))
         return take_owner_row(stacked, slot // self.slots_per_shard)
+
+    def spec_shard_stats(self):
+        """Per-shard speculative acceptance: accepted/offered/rate rows.
+
+        The dispatch returns per-SLOT counts; slots map to shards as
+        contiguous blocks, so the per-shard rollup is a host-side
+        reshape — no extra collective.  Skew across rows is the signal a
+        shard is serving draft-hostile traffic (its slots' adaptive k
+        will have backed off).
+        """
+        if self.speculative is None:
+            raise ValueError("engine was built without speculative=")
+        acc = self._spec_acc_slot.reshape(self.n_shards, -1).sum(axis=1)
+        off = self._spec_off_slot.reshape(self.n_shards, -1).sum(axis=1)
+        return [{"shard": s, "accepted": int(acc[s]), "offered": int(off[s]),
+                 "accept_rate": float(acc[s] / max(off[s], 1))}
+                for s in range(self.n_shards)]
 
     # -- shard drain & live migration (§12) ---------------------------------
 

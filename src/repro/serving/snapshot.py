@@ -139,6 +139,12 @@ class SlotSnapshot:
     queue_delay: float         # realized at first admission
     ttft: float                # realized at first token
     decode_spent: float        # occupied seconds before this suspension
+    # learned speculative draft length (0 = engine not speculative when
+    # snapshotted; a speculative engine re-arms the default on resume).
+    # Snapshots are only ever taken at chunk boundaries, where every
+    # speculative round has fully committed — ``pos`` is always the last
+    # COMMITTED position, never mid-draft state (DESIGN.md §13).
+    spec_k: int = 0
 
     @property
     def nbytes(self) -> int:

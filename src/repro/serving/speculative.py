@@ -1,0 +1,332 @@
+"""Self-speculative decoding: cheap-weight drafts, target-weight verify.
+
+The direct-cast premise (PAPER.md) means the serving stack already holds
+the SAME model at several widths for free — nxfp4 codes, and the bf16
+tensors they decode back to.  This module turns the cheap tier from "the
+product" into "the accelerator" (DESIGN.md §13): each decode round
+drafts ``k`` candidate tokens per slot with the DRAFT weights
+(``models.lm.draft_loop`` — a plain decode scan whose cache copy is
+simply discarded, so rejected rows never exist), scores all ``k+1`` rows
+in ONE batched TARGET-weight forward (``models.lm.verify_step``), and
+commits only the accepted prefix (``models.lm.commit_verify`` — the same
+value-gated ``write_token`` the sequential path uses, so committed bytes
+are bit-identical to a non-speculative run).
+
+Which pairing wins is a backend property, not a constant.  On the CPU
+container the nxfp4 PRODUCT is the expensive tier (its XLA qmatmul
+re-dequantizes the weights every decode step) while one batched (B, k+1)
+forward costs about one decode step — so the profitable arrangement is
+``draft="recycled"``: draft with the load-time-dequantized bf16 copy of
+the SAME cast weights (the paper's code-recycling spirit — zero extra
+quantization error between draft and target, hence high acceptance) and
+verify with the served nxfp4 product.  On TPU the roles flip (nxfp4 is
+the cheap tier): ``draft="nxfp4"`` drafts with a direct-cast of the bf16
+product.  Both run through the same machinery.
+
+Correctness contract: a GREEDY request served speculatively emits
+bit-identical tokens to the non-speculative engine.  Not approximately —
+structurally: the emitted tokens are always ``argmax`` of TARGET-weight
+logits (``accept_greedy`` emits the verify forward's own argmax chain;
+accepted candidates merely equal it), and those logits are bitwise the
+sequential decode's logits (``verify_step``'s row-stability contract).
+Acceptance changes how many rows one dispatch advances, never their
+values.  SAMPLED requests use standard residual-rejection
+(``accept_residual``): the output distribution provably equals target
+sampling, but the sample path differs from the non-speculative key
+chain (one split per ROUND, not per token) — seeded speculative runs
+are reproducible against themselves, not samplewise against the
+non-speculative engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SpeculativeConfig", "accept_greedy", "accept_residual",
+           "mask_round_emissions", "pack_emissions", "spec_round",
+           "AdaptiveK"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeculativeConfig:
+    """Engine-level speculative decoding knobs.
+
+    ``k``: maximum draft length per round (also each slot's starting
+    ``spec_k``).  ``draft``: "recycled" dequantizes the engine's OWN
+    cast weights back to bf16 (requires a quantized product; the CPU
+    pairing), any format name direct-casts the raw weights to that
+    format (the TPU pairing, e.g. "nxfp4").  ``adaptive`` enables the
+    per-slot controller: an EMA of each slot's accept fraction halves
+    ``spec_k`` below ``lower`` (draft tokens are being thrown away) and
+    doubles it back toward ``k`` above ``upper``.  k=1 never degrades
+    below the plain step: one draft + one verify still advances >= 1
+    token per round.
+    """
+
+    k: int = 4
+    draft: str = "recycled"
+    adaptive: bool = True
+    k_min: int = 1
+    ema: float = 0.7            # EMA decay for the accept-rate estimate
+    lower: float = 0.35         # back off below this accept fraction
+    upper: float = 0.75         # raise toward k above this
+
+
+def accept_greedy(tok, cands, vlogits, spec_k):
+    """Greedy accept-prefix: emit the verify forward's own argmax chain.
+
+    ``vlogits`` (B, k+1, V) row i scores the context through candidate
+    row i, so ``succ[:, i] = argmax(vlogits[:, i])`` is the TARGET
+    model's token at emission slot i+1.  Candidate i (1-based) is
+    accepted while it EQUALS ``succ[:, i-1]`` (and ``i <= spec_k``);
+    ``a`` is the accepted prefix length.  The round's proposed emissions
+    are ``[tok, succ_1 .. succ_k]`` — target tokens by construction,
+    which is WHY acceptance cannot change greedy output: a mispredicted
+    candidate still emits the target's token at its slot, it just ends
+    the round early.  Returns ``(a (B,), out_toks (B, k+1), nxt (B,))``
+    where ``nxt = succ[a]`` is the (unemitted) token entering the next
+    round — exactly the non-speculative chunk's trailing sampled token.
+    """
+    k = cands.shape[1]
+    succ = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)     # (B, k+1)
+    idx = jnp.arange(k, dtype=jnp.int32)
+    ok = (cands == succ[:, :k]) & \
+        (idx[None, :] < jnp.minimum(spec_k, k)[:, None])
+    a = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+    out_toks = jnp.concatenate([tok[:, None], succ[:, :k]], axis=1)
+    nxt = jnp.take_along_axis(succ, a[:, None], axis=1)[:, 0]
+    return a, out_toks, nxt
+
+
+def accept_residual(tok, cands, vlogits, dlogits, temperature, sub, spec_k):
+    """Residual-rejection acceptance (sampled slots), distribution-exact.
+
+    Standard speculative sampling [Leviathan et al.]: candidate i drawn
+    from the draft distribution ``pd_i`` is accepted with probability
+    ``min(1, pt_i(c_i) / pd_i(c_i))`` against the target distribution
+    ``pt_i``; on the first rejection the next token is drawn from the
+    normalized residual ``max(pt - pd, 0)``, and when ALL k candidates
+    are accepted the bonus token comes from ``pt_{k+1}`` directly
+    (implemented as a zero-padded ``pd`` row — the residual degenerates
+    to ``pt``).  The marginal distribution of every emitted token equals
+    target-only sampling.
+
+    All randomness derives from this round's per-slot subkey ``sub``
+    ((B, 2) uint32) via ``fold_in`` lanes (0: accept uniforms,
+    1: residual draw; the draft chain uses lane 2 — see ``spec_round``),
+    so admission order and neighbor slots cannot perturb a request.
+    Returns ``(a (B,), out_toks (B, k+1), nxt (B,))`` like
+    ``accept_greedy`` — here ``out_toks = [tok, c_1 .. c_k]`` (accepted
+    candidates ARE the emissions) and ``nxt`` is the residual/bonus draw.
+    """
+    b, k = cands.shape
+    safe = jnp.where(temperature > 0, temperature, 1.0)
+    pt = jax.nn.softmax(vlogits / safe[:, None, None], axis=-1)  # (B,k+1,V)
+    pd = jax.nn.softmax(jnp.swapaxes(dlogits, 0, 1)
+                        / safe[:, None, None], axis=-1)          # (B,k,V)
+    pd = jnp.concatenate([pd, jnp.zeros_like(pd[:, :1])], axis=1)
+    key_u = jax.vmap(jax.random.fold_in)(sub, jnp.zeros((b,), jnp.int32))
+    u = jax.vmap(lambda kk: jax.random.uniform(kk, (k,)))(key_u)
+    p_t = jnp.take_along_axis(pt[:, :k], cands[:, :, None], -1)[..., 0]
+    p_d = jnp.take_along_axis(pd[:, :k], cands[:, :, None], -1)[..., 0]
+    idx = jnp.arange(k, dtype=jnp.int32)
+    ok = (u * p_d <= p_t) & \
+        (idx[None, :] < jnp.minimum(spec_k, k)[:, None])
+    a = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+    ix = a[:, None, None]
+    pt_a = jnp.take_along_axis(pt, ix, axis=1)[:, 0]             # (B, V)
+    pd_a = jnp.take_along_axis(pd, ix, axis=1)[:, 0]
+    resid = jnp.maximum(pt_a - pd_a, 0.0)
+    # degenerate residual (pd == pt pointwise) only if the distributions
+    # coincide — any target draw is then correct; fall back to pt
+    resid = jnp.where(jnp.sum(resid, -1, keepdims=True) > 0, resid, pt_a)
+    key_c = jax.vmap(jax.random.fold_in)(sub, jnp.ones((b,), jnp.int32))
+    nxt = jax.vmap(jax.random.categorical)(key_c,
+                                           jnp.log(resid)).astype(jnp.int32)
+    out_toks = jnp.concatenate([tok[:, None], cands], axis=1)
+    return a, out_toks, nxt
+
+
+def mask_round_emissions(toks, n_raw, done, n_gen, stop, max_new):
+    """Per-round ``engine.mask_chunk_emissions``, plus the accept cap.
+
+    ``toks`` (B, k+1) are the round's proposed emissions, ``n_raw`` (B,)
+    the accepted-prefix emission count (``a + 1``).  Step j of slot b is
+    live iff the slot was not done at ROUND entry, ``j < n_raw`` (steps
+    beyond the accepted prefix were never generated), no stop token
+    landed strictly earlier in the round (the hit itself emits — stops
+    in earlier rounds already set ``done``), and the budget
+    ``n_gen + j < max_new`` holds.  Identical semantics to the
+    non-speculative chunk, applied round-by-round: ``done`` carries
+    across rounds exactly as it carries across chunk steps.  Returns
+    ``(emitted (B, k+1), n_emit (B,), n_gen', done')``.
+    """
+    q = toks.shape[1]
+    j = jnp.arange(q, dtype=jnp.int32)
+    beyond = j[None, :] >= n_raw[:, None]
+    hits = (toks == stop[:, None]) & ~beyond           # stop<0: never
+    before = jnp.cumsum(hits.astype(jnp.int32), axis=1) \
+        - hits.astype(jnp.int32)
+    done_before = done[:, None] | (before > 0) | beyond
+    budget = n_gen[:, None] + j[None, :]
+    done_before = done_before | (budget >= max_new[:, None])
+    emitted = jnp.where(done_before, 0, toks)
+    n_emit = jnp.sum(~done_before, axis=1).astype(jnp.int32)
+    n_gen = n_gen + n_emit
+    done = done | jnp.any(hits & ~done_before, axis=1) | (n_gen >= max_new)
+    return emitted, n_emit, n_gen, done
+
+
+def pack_emissions(toks_r, n_r):
+    """Left-pack per-round ragged emissions into one contiguous prefix.
+
+    ``toks_r`` (R, B, k+1) stacks each round's masked emissions,
+    ``n_r`` (R, B) the per-round emission counts.  The engine's harvest
+    reads ``emitted[slot, :delta]`` — a contiguous prefix — so each
+    slot's valid tokens (scattered across round sub-rows) are compacted
+    to the front, in round order, via an order-preserving sort key
+    (valid entries keep their flat position, invalid ones are pushed
+    past the end).  Returns (B, R*(k+1)) with zeros after the prefix.
+    """
+    r, b, q = toks_r.shape
+    n = r * q
+    toks = jnp.moveaxis(toks_r, 1, 0).reshape(b, n)
+    valid = jnp.arange(q, dtype=jnp.int32)[None, None, :] < n_r[:, :, None]
+    valid = jnp.moveaxis(valid, 1, 0).reshape(b, n)
+    flat = jnp.arange(n, dtype=jnp.int32)[None, :]
+    order = jnp.argsort(jnp.where(valid, 0, n) + flat, axis=1)
+    return jnp.take_along_axis(jnp.where(valid, toks, 0), order, axis=1)
+
+
+def spec_round(cfg, params, draft_params, tok, cache, keys, done, n_gen,
+               max_new, temperature, stop, live_r, poison, spec_k,
+               *, kv_fmt, k: int, greedy: bool):
+    """One draft -> verify -> accept -> commit round, fully on device.
+
+    ``live_r`` (B,) gates every cache mutation (parked / mid-prefill /
+    done slots ride the batch without committing anything — their draft
+    and verify work lands in discarded copies, and rows are independent,
+    so they cannot perturb live neighbors).  ``poison`` NaNs the VERIFY
+    logits (the authoritative ones — a poisoned draft would merely
+    propose junk the verify corrects), feeding the same containment
+    sentinel the non-speculative chunk probes.  ``greedy`` (static: no
+    sampled slot is live this chunk) skips the draft sampling chain and
+    the residual math, and leaves the PRNG keys untouched — mirroring
+    the non-speculative program's specialization.
+
+    Returns ``(emitted (B, k+1), n_emit, tok', cache', keys', done',
+    n_gen', finite (B,), a (B,))`` — ``a`` is the accepted candidate
+    count (the adaptive-k signal: this round advanced ``n_emit`` tokens
+    for ONE verify dispatch plus ``k`` draft steps).
+    """
+    from repro.models.lm import draft_loop, verify_step, commit_verify
+
+    b = tok.shape[0]
+    if greedy:
+        keys_next = sub = keys
+
+        def d_split(ks):
+            return ks, ks
+
+        def d_sample(lg, _):
+            return jnp.argmax(lg, axis=-1)
+
+        d_key = keys
+        cands, _ = draft_loop(cfg, draft_params, tok, cache, k, kv_fmt,
+                              d_sample, d_key, split_fn=d_split)
+        dlogits = None
+    else:
+        s = jax.vmap(jax.random.split)(keys)            # (B, 2, 2)
+        keys_next, sub = s[:, 0], s[:, 1]
+
+        def d_split(ks):
+            t = jax.vmap(jax.random.split)(ks)
+            return t[:, 0], t[:, 1]
+
+        def d_sample(lg, subs):
+            g = jnp.argmax(lg, axis=-1)
+            safe = jnp.where(temperature > 0, temperature, 1.0)
+            smp = jax.vmap(jax.random.categorical)(subs,
+                                                   lg / safe[:, None])
+            return jnp.where(temperature > 0, smp, g)
+
+        d_key = jax.vmap(jax.random.fold_in)(
+            sub, jnp.full((b,), 2, jnp.int32))
+        cands, _, dlogits = draft_loop(cfg, draft_params, tok, cache, k,
+                                       kv_fmt, d_sample, d_key,
+                                       split_fn=d_split, with_logits=True)
+
+    vlogits, pending = verify_step(cfg, params,
+                                   jnp.concatenate([tok[:, None], cands],
+                                                   axis=1),
+                                   cache, kv_fmt, live=live_r)
+    vlogits = jnp.where(poison[:, None, None], jnp.float32(jnp.nan),
+                        vlogits)
+    finite = jnp.all(jnp.isfinite(vlogits), axis=(1, 2))
+
+    a, out_toks, nxt = accept_greedy(tok, cands, vlogits, spec_k)
+    if not greedy:
+        a_s, out_s, nxt_s = accept_residual(tok, cands, vlogits, dlogits,
+                                            temperature, sub, spec_k)
+        sampled = temperature > 0
+        a = jnp.where(sampled, a_s, a)
+        out_toks = jnp.where(sampled[:, None], out_s, out_toks)
+        nxt = jnp.where(sampled, nxt_s, nxt)
+
+    emitted, n_emit, n_gen, done = mask_round_emissions(
+        out_toks, a + 1, done, n_gen, stop, max_new)
+    cache = commit_verify(cfg, cache, pending,
+                          jnp.where(live_r, n_emit, 0), kv_fmt,
+                          live=live_r)
+    tok = jnp.where(live_r, nxt, tok)
+    return emitted, n_emit, tok, cache, keys_next, done, n_gen, finite, a
+
+
+class AdaptiveK:
+    """Host-side per-slot draft-length controller (DESIGN.md §13).
+
+    Tracks an EMA of each slot's accept FRACTION (accepted candidates /
+    offered candidates, both summed over a chunk's rounds).  Below
+    ``lower`` the slot's ``spec_k`` halves (floor ``k_min``) — the draft
+    disagrees with the target on this request's distribution, so most
+    draft steps are wasted work; above ``upper`` it doubles back toward
+    the configured ``k``.  ``spec_k`` is a DEVICE-side per-slot cap
+    (acceptance never runs past it), while the dispatched round length
+    is the max over live slots — one program per distinct k, and halving
+    /doubling keeps the k set logarithmic.  State is per-slot and rides
+    slot snapshots (``SlotSnapshot.spec_k``), so a preempted request
+    resumes with its learned draft length.
+    """
+
+    def __init__(self, spec: SpeculativeConfig, n_slots: int):
+        import numpy as np
+        self.spec = spec
+        self._np = np
+        self.ema = np.ones((n_slots,), np.float64)
+        self.k = np.full((n_slots,), spec.k, np.int32)
+
+    def arm(self, slot: int, k: int | None = None) -> None:
+        """Reset a slot's controller at admission (or seed it at resume)."""
+        self.ema[slot] = 1.0
+        self.k[slot] = self.spec.k if not k else min(k, self.spec.k)
+
+    def update(self, live, accepted, offered) -> None:
+        """Fold one chunk's per-slot acceptance counts into the EMAs."""
+        np, spec = self._np, self.spec
+        if not spec.adaptive:
+            return
+        act = np.asarray(live, bool) & (np.asarray(offered) > 0)
+        rate = np.where(act, accepted / np.maximum(offered, 1), 0.0)
+        self.ema = np.where(act, spec.ema * self.ema
+                            + (1 - spec.ema) * rate, self.ema)
+        self.k = np.where(act & (self.ema < spec.lower),
+                          np.maximum(self.k // 2, spec.k_min), self.k)
+        self.k = np.where(act & (self.ema > spec.upper),
+                          np.minimum(self.k * 2, spec.k), self.k)
+
+    def round_k(self, live) -> int:
+        """Dispatch-wide draft length: max live cap (>=1 when idle)."""
+        ks = self.k[self._np.asarray(live, bool)]
+        return int(max(1, ks.max())) if ks.size else max(1, self.spec.k)
