@@ -144,7 +144,7 @@ def self_attention(cfg: ModelConfig, p, x, positions, *, causal=True,
 
 def self_attention_resume(cfg: ModelConfig, p, x, lane_k, lane_v, positions,
                           offset, kv_valid, *, window=None, prefix: str = "",
-                          chunk: int = 1024):
+                          chunk: int = 1024, wrapped: bool = False):
     """Resumable prefill attention: one (1, P) chunk against the lane.
 
     ``lane_k``/``lane_v`` are a fixed-size dense scratch holding the
@@ -159,6 +159,19 @@ def self_attention_resume(cfg: ModelConfig, p, x, lane_k, lane_v, positions,
     never perturbs numerics: the outputs are bit-identical to the rows
     a whole-prompt ``self_attention`` produces.
 
+    ``wrapped`` (STATIC) is the RING graph for sliding-window prompts
+    longer than the lane (DESIGN.md §9/§14): once ``offset`` reaches the
+    lane rows R, chunk rows write at ``offset % R`` and the lane is read
+    through a roll that restores natural order — view row j holds global
+    position ``gbase + j`` with ``gbase = offset + P - R``, so attending
+    with the STATIC query offset ``R - P`` and ``kv_valid - gbase``
+    valid rows reproduces the global causal + window masks exactly.
+    Sound iff R >= window + P (every in-window key still resident; the
+    engine validates at submit) and only for wrapped offsets: at short
+    offsets the view would surface stale rows past the written prefix,
+    which the unwrapped graph's kv_valid mask already excludes — hence
+    a static flag, not a runtime select.
+
     Returns (attn out (1, P, D), k, v (1, P, KVH, hd) rope'd chunk rows
     for the live-cache write, lane_k', lane_v').
     """
@@ -171,14 +184,26 @@ def self_attention_resume(cfg: ModelConfig, p, x, lane_k, lane_v, positions,
         from repro.core.quantize import fake_quant
         k = fake_quant(k, cfg.kv_sim_fmt, axis=-1)
         v = fake_quant(v, cfg.kv_sim_fmt, axis=-1)
+    r_lane = lane_k.shape[1]
+    w_off = jnp.asarray(offset, jnp.int32) % r_lane if wrapped else offset
     lane_k = jax.lax.dynamic_update_slice(
-        lane_k, k.astype(lane_k.dtype), (0, offset, 0, 0))
+        lane_k, k.astype(lane_k.dtype), (0, w_off, 0, 0))
     lane_v = jax.lax.dynamic_update_slice(
-        lane_v, v.astype(lane_v.dtype), (0, offset, 0, 0))
+        lane_v, v.astype(lane_v.dtype), (0, w_off, 0, 0))
     q = q * (1.0 / math.sqrt(cfg.hd))
-    o = attend_chunked(q.astype(x.dtype), lane_k.astype(x.dtype),
-                       lane_v.astype(x.dtype), causal=True, window=window,
-                       q_offset=offset, kv_valid=kv_valid,
+    if wrapped:
+        assert window is not None and r_lane >= window + t, \
+            (r_lane, window, t)
+        gbase = jnp.asarray(offset, jnp.int32) + t - r_lane   # > 0 wrapped
+        read_k = jnp.roll(lane_k, -(gbase % r_lane), axis=1)
+        read_v = jnp.roll(lane_v, -(gbase % r_lane), axis=1)
+        q_off, valid = r_lane - t, kv_valid - gbase
+    else:
+        read_k, read_v = lane_k, lane_v
+        q_off, valid = offset, kv_valid
+    o = attend_chunked(q.astype(x.dtype), read_k.astype(x.dtype),
+                       read_v.astype(x.dtype), causal=True, window=window,
+                       q_offset=q_off, kv_valid=valid,
                        chunk_q=chunk, chunk_kv=chunk)
     o = o.reshape(b, t, cfg.n_heads * cfg.hd).astype(x.dtype)
     return dense(o, p[f"{prefix}wo"]), k, v, lane_k, lane_v

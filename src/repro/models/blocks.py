@@ -128,7 +128,8 @@ def _slot_put(buf, val, slot, apply=None):
 
 def layer_prefill_chunk(cfg: ModelConfig, p: Params, x, lane_l, cache_l,
                         slot, positions, offset, n_valid, kind: str,
-                        kv_fmt: Optional[str], first, active=None):
+                        kv_fmt: Optional[str], first, active=None,
+                        wrapped: bool = False):
     """One layer of the resumable chunked prefill. x (1, P, D).
 
     Mirrors ``layer_forward`` over a single (1, P) chunk of the prompt:
@@ -145,7 +146,10 @@ def layer_prefill_chunk(cfg: ModelConfig, p: Params, x, lane_l, cache_l,
     ``active`` (traced bool, sharded no-op calls — see
     ``lm.prefill_chunk``) gates the SSM cache-state writes; the K/V
     scatter needs no gate because an inactive call's ``n_valid=0``
-    routes every row out of range.
+    routes every row out of range.  ``wrapped`` (static) selects the
+    ring-lane attention graph for long-SWA chunks past the lane's row
+    capacity (``attention.self_attention_resume``); the live-cache
+    scatter is ring-addressed either way.
 
     Returns (x, new_lane_l, new_cache_l).
     """
@@ -160,7 +164,7 @@ def layer_prefill_chunk(cfg: ModelConfig, p: Params, x, lane_l, cache_l,
         attn_y, kk, vv, lane_k, lane_v = self_attention_resume(
             cfg, p, h, lane_l["k"], lane_l["v"], positions, offset,
             kv_valid=jnp.asarray(offset + n_valid, jnp.int32).reshape(1),
-            window=cfg.sliding_window)
+            window=cfg.sliding_window, wrapped=wrapped)
         new_lane.update(k=lane_k, v=lane_v)
         attn_entries = {n: cache_l[n] for n in cache_l
                         if not n.startswith(("h", "conv"))}

@@ -37,6 +37,16 @@ from .common import ModelConfig
 # every step, so it has no immutable prefix to checksum)
 _KV_LEAVES = ("k", "v", "k_packed", "k_meta", "v_packed", "v_meta")
 
+# Paged-cache leaf naming (DESIGN.md §14): each dense leaf <name> has a
+# physical-page pool twin "pool_<name>" of shape (L, NP, page, ...tail),
+# indexed through the per-slot "block" table (L, B, P) — replicated
+# across L so the layer scan hands every layer an identical (B, P)
+# table with zero plumbing changes.  Logical row r of slot b lives at
+# pool[block[b, r // page], r % page].  Physical page 0 is the reserved
+# null page (never allocated; unreserved table entries point there and
+# writes headed for it are routed out of range and dropped).
+_POOL_PREFIX = "pool_"
+
 
 def attn_cache_init(cfg: ModelConfig, n_layers: int, batch: int,
                     max_len: int, kv_fmt: Optional[str]):
@@ -53,6 +63,66 @@ def attn_cache_init(cfg: ModelConfig, n_layers: int, batch: int,
     zc = jnp.zeros((n_layers, batch, s, kvh, nb, bpb), jnp.uint8)
     zm = jnp.zeros((n_layers, batch, s, kvh, nb), jnp.uint16)
     return {"k_packed": zc, "k_meta": zm, "v_packed": zc, "v_meta": zm}
+
+
+def paged_attn_cache_init(cfg: ModelConfig, n_layers: int, batch: int,
+                          max_len: int, kv_fmt: Optional[str],
+                          n_pages: int, page_size: int):
+    """Allocate a paged attention cache: pool leaves + block table.
+
+    The per-slot logical row space is the same as the dense layout's
+    (window-sized ring for SWA, max_len otherwise) so every downstream
+    shape and reduction order is preserved bit-for-bit — but physical
+    storage is ``n_pages`` pages of ``page_size`` rows, mapped through
+    the (L, B, P) block table.  Requires the logical row capacity to be
+    a whole number of pages.
+    """
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    s = cfg.sliding_window if cfg.sliding_window else max_len
+    if s % page_size:
+        raise ValueError(
+            f"page_size {page_size} must divide the slot row capacity {s} "
+            f"(sliding window or max_len)")
+    block = jnp.zeros((n_layers, batch, s // page_size), jnp.int32)
+    if kv_fmt is None:
+        z = jnp.zeros((n_layers, n_pages, page_size, kvh, hd), cfg.dtype)
+        return {"block": block, "pool_k": z, "pool_v": z}
+    fmt = get_format(kv_fmt)
+    nb = -(-hd // fmt.block_size)
+    bpb = bytes_per_block(fmt.block_size, fmt.bits)
+    zc = jnp.zeros((n_layers, n_pages, page_size, kvh, nb, bpb), jnp.uint8)
+    zm = jnp.zeros((n_layers, n_pages, page_size, kvh, nb), jnp.uint16)
+    return {"block": block, "pool_k_packed": zc, "pool_k_meta": zm,
+            "pool_v_packed": zc, "pool_v_meta": zm}
+
+
+def paged_layer_view(layer_cache):
+    """Gather one layer's paged pool into the dense (B, S, ...) layout.
+
+    ``pool[block]`` reshaped to (B, P*page, ...) is EXACTLY the dense
+    cache leaf shape, so attention downstream of the view is the same
+    program as the fixed-slot engine — identical shapes, identical
+    reduction order, bitwise-identical output.  Rows mapped through the
+    null page (or stale pages) surface garbage bytes, but only at
+    positions attention masks to an exact-zero contribution.
+    """
+    blk = layer_cache["block"]                              # (B, P)
+    out = {}
+    for name in _KV_LEAVES:
+        pool = layer_cache.get(_POOL_PREFIX + name)
+        if pool is None:
+            continue
+        g = pool[blk]                                       # (B, P, page, ...)
+        out[name] = g.reshape(g.shape[0], g.shape[1] * g.shape[2],
+                              *g.shape[3:])
+    return out
+
+
+def _pool_dims(layer_cache):
+    """(block_table, n_pages, page_size) of one layer's paged cache."""
+    pool0 = next(v for n, v in layer_cache.items()
+                 if n.startswith(_POOL_PREFIX))
+    return layer_cache["block"], pool0.shape[0], pool0.shape[1]
 
 
 def ssm_cache_init(cfg: ModelConfig, n_layers: int, batch: int):
@@ -129,9 +199,38 @@ def write_prefill_at(cfg: ModelConfig, layer_cache, k, v, slot, offset,
     w = cfg.sliding_window
     pch = k.shape[1]
     assert not w or pch <= w, (pch, w)   # duplicate ring rows corrupt
-    s = next(iter(layer_cache.values())).shape[1]
     gpos = offset + jnp.arange(pch, dtype=jnp.int32)
     row = (gpos % w) if w else gpos
+
+    if "block" in layer_cache:
+        # paged: route each chunk row through the slot's block table to
+        # its physical page.  Padded-tail rows and rows whose table
+        # entry is still the null page go past the pool bound (dropped)
+        # — the scattered bytes are the same per-row quantized values as
+        # the dense branch, so chunked writes stay bit-identical to a
+        # whole-prompt cast.
+        blk, n_pages, page = _pool_dims(layer_cache)
+        phys = jnp.take(blk, slot, axis=0)[row // page]     # (pch,)
+        phys = jnp.where(phys == 0, n_pages, phys)          # null -> dropped
+        phys = jnp.where(jnp.arange(pch) < n_valid, phys, n_pages)
+        ro = row % page
+
+        def put(buf, val):
+            return buf.at[phys, ro].set(val[0].astype(buf.dtype),
+                                        mode="drop")
+
+        if kv_fmt is None:
+            return {"block": blk, "pool_k": put(layer_cache["pool_k"], k),
+                    "pool_v": put(layer_cache["pool_v"], v)}
+        kp, km = _quantize_kv(k, kv_fmt)
+        vp, vm = _quantize_kv(v, kv_fmt)
+        return {"block": blk,
+                "pool_k_packed": put(layer_cache["pool_k_packed"], kp),
+                "pool_k_meta": put(layer_cache["pool_k_meta"], km),
+                "pool_v_packed": put(layer_cache["pool_v_packed"], vp),
+                "pool_v_meta": put(layer_cache["pool_v_meta"], vm)}
+
+    s = next(iter(layer_cache.values())).shape[1]
     row = jnp.where(jnp.arange(pch) < n_valid, row, s)   # OOB -> dropped
 
     def put(buf, val):
@@ -173,6 +272,37 @@ def write_token(cfg: ModelConfig, layer_cache, k1, v1, pos,
     w = cfg.sliding_window
     pos = _per_slot(pos, k1.shape[0])
     slot = (pos % w) if w else pos
+
+    if "block" in layer_cache:
+        # paged: each batch slot's ring row maps through ITS block-table
+        # row to a physical page — a batched (page, in-page-row) scatter
+        # instead of the per-slot dynamic_update_slice.  Distinct slots
+        # own distinct physical pages (shared pages are COW-broken by
+        # the engine before any divergent write reaches them), so the
+        # scatter never sees colliding indices; not-live slots and rows
+        # mapped to the null page route past the pool bound and drop.
+        blk, n_pages, page = _pool_dims(layer_cache)
+        pg, ro = slot // page, slot % page                  # (B,) each
+        phys = jnp.take_along_axis(blk, pg[:, None], axis=1)[:, 0]
+        phys = jnp.where(phys == 0, n_pages, phys)
+        if live is not None:
+            phys = jnp.where(live, phys, n_pages)
+
+        def updp(buf, val):
+            return buf.at[phys, ro].set(val[:, 0].astype(buf.dtype),
+                                        mode="drop")
+
+        if kv_fmt is None:
+            return {"block": blk,
+                    "pool_k": updp(layer_cache["pool_k"], k1),
+                    "pool_v": updp(layer_cache["pool_v"], v1)}
+        kp, km = _quantize_kv(k1, kv_fmt)
+        vp, vm = _quantize_kv(v1, kv_fmt)
+        return {"block": blk,
+                "pool_k_packed": updp(layer_cache["pool_k_packed"], kp),
+                "pool_k_meta": updp(layer_cache["pool_k_meta"], km),
+                "pool_v_packed": updp(layer_cache["pool_v_packed"], vp),
+                "pool_v_meta": updp(layer_cache["pool_v_meta"], vm)}
 
     def upd(buf, val):
         if live is None:
@@ -305,6 +435,14 @@ def attend_decode(cfg: ModelConfig, layer_cache, q, pos,
     w = cfg.sliding_window
     pos = _per_slot(pos, b)
     lengths = jnp.minimum(pos + 1, w) if w else pos + 1
+
+    if "block" in layer_cache:
+        # paged: gather the pool through the block table into the exact
+        # dense (B, S, ...) view, then fall through to the SAME
+        # attention code — shapes, masking and reduction order are
+        # identical to the fixed-slot engine, so outputs are bitwise
+        # equal on valid rows (garbage rows are masked by `lengths`).
+        layer_cache = paged_layer_view(layer_cache)
 
     if kv_fmt is not None:
         fmt = get_format(kv_fmt)

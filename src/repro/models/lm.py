@@ -287,7 +287,8 @@ def init_lane(cfg: ModelConfig, max_len: int, p_chunk: int,
 
 def prefill_chunk(cfg: ModelConfig, params: Params, tokens, cache, slot,
                   offset, n_valid, lane, kv_fmt: Optional[str],
-                  with_head: bool = True, active=None):
+                  with_head: bool = True, active=None,
+                  wrapped: bool = False):
     """Advance the in-flight prefill by ONE fixed-shape (1, P) chunk.
 
     ``tokens`` holds prompt positions [offset, offset + P) (tail-padded
@@ -315,6 +316,12 @@ def prefill_chunk(cfg: ModelConfig, params: Params, tokens, cache, slot,
     garbage writes either way: the next prompt's chunks overwrite/mask
     every row they read (see ``init_lane``).
 
+    ``wrapped`` (STATIC) selects the ring-lane graph for chunks whose
+    global offset has passed the lane's row capacity — how long SWA
+    prompts admit through the fixed-size lane (DESIGN.md §9/§14).  It
+    must be False for in-capacity chunks: the two graphs index the lane
+    differently and only agree on their own offset ranges.
+
     Returns (logits (1, V) — or hidden (1, D) — , new_cache, new_lane).
     """
     b, pch = tokens.shape
@@ -331,7 +338,7 @@ def prefill_chunk(cfg: ModelConfig, params: Params, tokens, cache, slot,
         lp, lane_l, cache_l = xs
         h, new_lane_l, new_cache_l = layer_prefill_chunk(
             cfg, lp, h, lane_l, cache_l, slot, positions, offset, n_valid,
-            kind, kv_fmt, first, active=active)
+            kind, kv_fmt, first, active=active, wrapped=wrapped)
         return h, (new_lane_l, new_cache_l)
 
     x, (new_lane, new_layers) = jax.lax.scan(
@@ -637,6 +644,38 @@ def init_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
         lambda: init_cache(cfg, batch, max_len, kv_fmt, max_len - 1))
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     kv_fmt: Optional[str], n_pages: int, page_size: int,
+                     pos_value: int = 0) -> Dict[str, Any]:
+    """Allocate the paged-engine arena: pool leaves + per-slot block tables.
+
+    Same pytree contract as ``init_cache`` (``pos`` (B,), scan-stacked
+    ``layers``) but attention KV lives in an ``n_pages``-page physical
+    pool indexed through each slot's block table (DESIGN.md §14) instead
+    of B max_len-sized slabs.  The decode/prefill/verify programs are
+    unchanged — ``kvcache``'s write/attend paths dispatch on the
+    ``block`` leaf.  SSM recurrent state has no sequence axis and stays
+    per-slot dense.  Scanned-stack families only (the paged engine's
+    service surface).
+    """
+    if cfg.family not in _KIND:
+        raise ValueError(f"paged cache serves the scanned-stack families, "
+                         f"not {cfg.family!r}")
+    from .kvcache import paged_attn_cache_init
+
+    cache: Dict[str, Any] = {"pos": jnp.full((batch,), pos_value,
+                                             jnp.int32)}
+    entries: Dict[str, Any] = {}
+    if cfg.family != "ssm":
+        entries.update(paged_attn_cache_init(cfg, cfg.n_layers, batch,
+                                             max_len, kv_fmt, n_pages,
+                                             page_size))
+    if cfg.family in ("ssm", "hybrid"):
+        entries.update(ssm_cache_init(cfg, cfg.n_layers, batch))
+    cache["layers"] = entries
+    return cache
+
+
 # ---------------------------------------------------------------------------
 # slot surgery: admit / evict ONE sequence of a live batched cache
 # ---------------------------------------------------------------------------
@@ -644,6 +683,81 @@ def init_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
 def _batch_axis(name: str) -> int:
     """Batch-axis position inside a cache group's stacked leaves."""
     return 2 if name == "self_layers" else 1  # vlm self stack: (G, k-1, B,…)
+
+
+def _paged_slot_table(group, slot):
+    """One slot's block-table rows (L, P) out of a paged cache group."""
+    blk = group["block"]                                     # (L, B, P)
+    row = jax.lax.dynamic_slice(
+        blk, (jnp.zeros((), jnp.int32), jnp.asarray(slot, jnp.int32),
+              jnp.zeros((), jnp.int32)),
+        (blk.shape[0], 1, blk.shape[2]))
+    return row[:, 0]
+
+
+def _write_paged_group(group, solo_group, slot, apply):
+    """Scatter a DENSE-layout batch-1 group into one paged slot.
+
+    ``solo_group`` carries standard dense leaf names (k/v/k_packed/...,
+    shapes (L, 1, S, ...)) — the snapshot interchange layout — and each
+    row r routes through the slot's block table to pool[phys, r % page].
+    Rows whose table entry is still the null page (beyond the slot's
+    reservation: snapshots zero-pad to full capacity) and non-owner
+    shards (``apply`` False) route past the pool bound and drop.  SSM
+    leaves in the same group take the ordinary gated slice.
+    """
+    row = _paged_slot_table(group, slot)                     # (L, P)
+    pool0 = next(v for n, v in group.items() if n.startswith("pool_"))
+    n_pages, page = pool0.shape[1], pool0.shape[2]
+    s = row.shape[1] * page
+    r = jnp.arange(s, dtype=jnp.int32)
+    ro = r % page
+    phys = row[:, r // page]                                 # (L, S)
+    phys = jnp.where(phys == 0, n_pages, phys)
+    if apply is not None:
+        phys = jnp.where(jnp.asarray(apply, bool), phys, n_pages)
+    out = {"block": group["block"]}
+    for name, leaf in group.items():
+        if name == "block":
+            continue
+        if name.startswith("pool_"):
+            vals = solo_group[name[len("pool_"):]][:, 0]     # (L, S, ...)
+            out[name] = jax.vmap(
+                lambda pl, ph, vl: pl.at[ph, ro].set(
+                    vl.astype(pl.dtype), mode="drop"))(leaf, phys, vals)
+        else:
+            idx = [0] * leaf.ndim
+            idx[1] = slot
+            out[name] = gated_update_slice(
+                leaf, solo_group[name].astype(leaf.dtype), tuple(idx),
+                apply)
+    return out
+
+
+def _read_paged_group(group, slot):
+    """Gather one paged slot back into the DENSE-layout batch-1 group.
+
+    The inverse of ``_write_paged_group``: pool pages gather through the
+    slot's block table into (L, 1, S, ...) leaves under their dense
+    names — a paged snapshot is indistinguishable from a fixed-slot one
+    (same packed-bytes contract, restorable by either engine).
+    """
+    row = _paged_slot_table(group, slot)                     # (L, P)
+    out = {}
+    for name, leaf in group.items():
+        if name == "block":
+            continue
+        if name.startswith("pool_"):
+            g = jax.vmap(lambda pl, bl: pl[bl])(leaf, row)   # (L,P,page,...)
+            out[name[len("pool_"):]] = g.reshape(
+                g.shape[0], 1, g.shape[1] * g.shape[2], *g.shape[3:])
+        else:
+            idx = [jnp.zeros((), jnp.int32)] * leaf.ndim
+            idx[1] = jnp.asarray(slot, jnp.int32)
+            sizes = list(leaf.shape)
+            sizes[1] = 1
+            out[name] = jax.lax.dynamic_slice(leaf, idx, sizes)
+    return out
 
 
 def write_cache_slot(cache: Dict[str, Any], solo: Dict[str, Any], slot,
@@ -661,6 +775,9 @@ def write_cache_slot(cache: Dict[str, Any], solo: Dict[str, Any], slot,
         cache["pos"], jnp.asarray(solo["pos"], jnp.int32), (slot,), apply)}
     for name, group in cache.items():
         if name == "pos":
+            continue
+        if isinstance(group, dict) and "block" in group:
+            new[name] = _write_paged_group(group, solo[name], slot, apply)
             continue
         axis = _batch_axis(name)
 
@@ -688,6 +805,9 @@ def read_cache_slot(cache: Dict[str, Any], slot):
         cache["pos"], (jnp.asarray(slot, jnp.int32),), (1,))}
     for name, group in cache.items():
         if name == "pos":
+            continue
+        if isinstance(group, dict) and "block" in group:
+            out[name] = _read_paged_group(group, slot)
             continue
         axis = _batch_axis(name)
 

@@ -7,11 +7,15 @@ from .scheduler import (AdmissionPolicy, ContinuousEngine, DegradeOverBudget,
                         Request, RequestResult, ShardedSlotScheduler,
                         SheddingPolicy, ShortestPromptFirst, SlotScheduler,
                         Status, TtftDeadline)
+from .paged import NULL_PAGE, PagePool, auto_page_size
+from .paged_engine import PagedContinuousEngine, ShardedPagedContinuousEngine
 from .sharded import ShardedContinuousEngine
 from .snapshot import SlotSnapshot, load_checkpoint, save_checkpoint
 from .speculative import SpeculativeConfig
 
 __all__ = ["ServeEngine", "GenerationResult", "ContinuousEngine",
+           "PagedContinuousEngine", "ShardedPagedContinuousEngine",
+           "PagePool", "auto_page_size", "NULL_PAGE",
            "ShardedContinuousEngine", "Request", "RequestResult", "Status",
            "SlotScheduler", "ShardedSlotScheduler", "AdmissionPolicy",
            "FifoPolicy", "ShortestPromptFirst", "TtftDeadline",

@@ -27,11 +27,15 @@ __all__ = ["emit", "parse_event", "Journal", "replay", "EVENT_KINDS"]
 
 # Every kind the engine/scheduler emit today.  Recovery kinds (suspend
 # through restore) are what journal replay reconstructs an engine's
-# request placement from.
+# request placement from.  Memory kinds (pool / cow-break / prefix-hit)
+# are the paged-KV observability records (DESIGN.md §14): page-pool
+# occupancy + high watermark at every allocation/release edge, shared-
+# page copy-on-write breaks, and shared-prefix admission hits.
 EVENT_KINDS = ("admit", "prefill-start", "prefill-done", "degrade",
                "shed", "expire", "cancel", "fault", "quarantine",
                "requeue", "finish", "suspend", "resume", "preempt",
-               "migrate", "drain", "checkpoint", "restore", "spec-k")
+               "migrate", "drain", "checkpoint", "restore", "spec-k",
+               "pool", "cow-break", "prefix-hit")
 
 
 def emit(logger, event: str, **fields) -> None:

@@ -53,7 +53,7 @@ import dataclasses
 import functools
 import logging
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,7 +67,7 @@ from repro.models import (decode_loop, init_cache, init_lane, prefill_chunk,
 from repro.models.common import ModelConfig, gated_update_slice
 from repro.models.kvcache import kv_slot_checksum, ssm_state_checksum
 from .engine import cached_program, mask_chunk_emissions
-from .events import Journal, emit
+from .events import Journal, replay
 from .faults import flip_kv_bytes
 from .snapshot import (SlotSnapshot, load_checkpoint, pack_device_state,
                        save_checkpoint, slot_row_capacity,
@@ -329,15 +329,25 @@ class DegradeOverBudget(SheddingPolicy):
     Results served under this tier carry ``degraded=True``.  A per-slot
     nxfp4-KV degrade tier is the ROADMAP follow-up; capped ``max_new``
     is the degrade axis this policy implements.
+
+    ``pool_watermark`` (paged engines, DESIGN.md §14) adds a MEMORY
+    trigger to the queue-length one: when the engine's page-pool
+    occupancy reaches the watermark (a fraction in (0, 1]), every
+    arrived waiter is treated as over budget and admitted degraded —
+    shorter answers free pages sooner, which is the backpressure a
+    paged cache actually wants (queue length says nothing about HBM).
+    Ignored by engines without a page pool.
     """
 
     name = "degrade"
 
     def __init__(self, max_new_cap: int = 8, force_greedy: bool = True,
-                 hard_cap: Optional[int] = None):
+                 hard_cap: Optional[int] = None,
+                 pool_watermark: Optional[float] = None):
         self.max_new_cap = max_new_cap
         self.force_greedy = force_greedy
         self.hard_cap = hard_cap
+        self.pool_watermark = pool_watermark
 
     def over_budget(self, sched, arrived, n_over, now):
         shed: List[int] = []
@@ -454,6 +464,19 @@ class SlotScheduler:
         # shards taken out of rotation (sharded engine only: admission
         # never routes to a drained shard; empty set for unsharded)
         self.drained: set = set()
+        # paged-engine hooks (DESIGN.md §14), both optional:
+        # admission_gate(req, shard, resumable) -> bool vetoes a policy
+        # pick whose KV pages don't fit right now (a free SLOT is no
+        # longer sufficient); pool_monitor() -> occupancy in [0, 1]
+        # feeds shedding policies with a pool_watermark.
+        self.admission_gate = None
+        self.pool_monitor = None
+
+    def _gate(self, req: Request, shard: Optional[int],
+              resumable: bool) -> bool:
+        if self.admission_gate is None:
+            return True
+        return bool(self.admission_gate(req, shard, resumable))
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -475,11 +498,15 @@ class SlotScheduler:
         return slot, req
 
     def next_admission(self, now: float) -> Optional[Tuple[int, Request]]:
-        """Pop (slot, request) if a slot is free and the policy picks one."""
+        """Pop (slot, request) if a slot is free, the policy picks one,
+        and the admission gate (pages, for paged engines) accepts it."""
         if not self.free or not self.queue:
             return None
         idx = self.policy.select(self.queue, now)
         if idx is None:
+            return None
+        req = self.queue[idx]
+        if not self._gate(req, None, req.uid in self.resumable):
             return None
         return self._take(idx, self.free[0])
 
@@ -496,6 +523,8 @@ class SlotScheduler:
             return None
         idx = self.policy.select(self.queue, now)
         if idx is None or self.queue[idx].uid not in self.resumable:
+            return None
+        if not self._gate(self.queue[idx], None, True):
             return None
         return self._take(idx, self.free[0])
 
@@ -523,13 +552,25 @@ class SlotScheduler:
         an initial burst would shed requests an idle slot was about to
         serve).  Degrade markers are recorded here (and logged once per
         uid); they take effect when ``_take`` admits the marked request.
+
+        A shedding policy with a ``pool_watermark`` adds a MEMORY
+        trigger: when ``pool_monitor`` (set by paged engines) reports
+        occupancy at or past the watermark, every arrived waiter counts
+        as over budget — with ``DegradeOverBudget`` that admits the
+        backlog under the cheap tier until pages free up.
         """
-        if self.max_queue is None:
+        wm = getattr(self.shedding, "pool_watermark", None)
+        pressure = (wm is not None and self.pool_monitor is not None
+                    and self.pool_monitor() >= wm)
+        if self.max_queue is None and not pressure:
             return []
         arrived = sorted((i for i, r in enumerate(self.queue)
                           if r.arrival_time <= now),
                          key=lambda i: (self.queue[i].arrival_time, i))
-        n_over = len(arrived) - self.max_queue - len(self.free)
+        n_over = (len(arrived) - self.max_queue - len(self.free)
+                  if self.max_queue is not None else 0)
+        if pressure:
+            n_over = max(n_over, len(arrived))
         if n_over <= 0:
             return []
         shed_idx, degrades = self.shedding.over_budget(self, arrived,
@@ -644,19 +685,23 @@ class ShardedSlotScheduler(SlotScheduler):
             return None
         if shard is not None and shard in self.drained:
             return None
-        if shard is None:
-            with_free = ({self.shard_of(s) for s in self.free}
-                         - self.drained)
-            if not with_free:
-                return None
-            shard = min(with_free, key=lambda s: (self.load(s), s))
-        free = self.free_on(shard)
-        if not free:
-            return None
         idx = self.policy.select(self.queue, now)
         if idx is None:
             return None
-        return self._take(idx, free[0])
+        req = self.queue[idx]
+        resum = req.uid in self.resumable
+        if shard is not None:
+            free = self.free_on(shard)
+            if not free or not self._gate(req, shard, resum):
+                return None
+            return self._take(idx, free[0])
+        with_free = {self.shard_of(s) for s in self.free} - self.drained
+        # least-loaded first; a shard whose page pool can't fit the pick
+        # is skipped — another shard's pool may still have room
+        for sh in sorted(with_free, key=lambda s: (self.load(s), s)):
+            if self._gate(req, sh, resum):
+                return self._take(idx, self.free_on(sh)[0])
+        return None
 
     def next_resume(self, now: float) -> Optional[Tuple[int, Request]]:
         """Resume routing: policy's resumable pick -> least-loaded healthy
@@ -670,8 +715,11 @@ class ShardedSlotScheduler(SlotScheduler):
         idx = self.policy.select(self.queue, now)
         if idx is None or self.queue[idx].uid not in self.resumable:
             return None
-        shard = min(healthy, key=lambda s: (self.load(s), s))
-        return self._take(idx, self.free_on(shard)[0])
+        req = self.queue[idx]
+        for shard in sorted(healthy, key=lambda s: (self.load(s), s)):
+            if self._gate(req, shard, True):
+                return self._take(idx, self.free_on(shard)[0])
+        return None
 
 
 class ContinuousEngine:
@@ -828,6 +876,15 @@ class ContinuousEngine:
             # submit (SWA rings wrap the LIVE cache, but a clamped lane
             # write would silently corrupt rows inside the window)
             self._lane_rows = -(-max_len // p_chunk) * p_chunk
+            # ring-aware lane: SWA prompts LONGER than the scratch wrap
+            # it modulo _lane_rows instead of failing at submit — sound
+            # whenever the scratch still covers a full window plus the
+            # incoming chunk (every attended key then sits un-clobbered
+            # in the ring; see models.attention.self_attention_resume).
+            # The sharded engine keeps the strict bound (its fused lane
+            # rides per-shard cursors this flag doesn't thread through).
+            self._lane_ring = bool(cfg.sliding_window) and \
+                self._lane_rows >= cfg.sliding_window + p_chunk
             self._build_lane()
 
     # -- construction hooks (the sharded engine overrides these) ------------
@@ -889,7 +946,7 @@ class ContinuousEngine:
             ("lane", cfg, kv, self.p_chunk, mk),
             lambda: jax.jit(functools.partial(
                 self._lane_chunk_fn, cfg=cfg, kv_fmt=kv),
-                static_argnames=("with_head",)))
+                static_argnames=("with_head", "wrapped")))
         self._finish = cached_program(
             ("finish", cfg, mk), lambda: jax.jit(self._finish_prefill_fn))
 
@@ -965,7 +1022,7 @@ class ContinuousEngine:
                 ("lane", cfg, kv, p, None),
                 lambda: jax.jit(functools.partial(
                     self._lane_chunk_fn, cfg=cfg, kv_fmt=kv),
-                    static_argnames=("with_head",)))
+                    static_argnames=("with_head", "wrapped")))
             toks = np.zeros((1, p), np.int32)
             self.p_chunk_sweep[p] = self._time_best(lambda: fn(
                 params, toks, cache, lane, jnp.int32(0),
@@ -1016,16 +1073,21 @@ class ContinuousEngine:
 
     @staticmethod
     def _lane_chunk_fn(params, tokens, cache, lane, slot, offset, n_valid,
-                       *, cfg, kv_fmt, with_head: bool):
+                       *, cfg, kv_fmt, with_head: bool,
+                       wrapped: bool = False):
         """One fixed-shape lane advance (see ``models.prefill_chunk``).
 
         ``with_head`` (static) is True only for a prompt's FINAL chunk —
         intermediate chunks skip the vocab-head matmul their discarded
         return would have paid for (two compiled programs total, both
-        prompt-length-independent).
+        prompt-length-independent).  ``wrapped`` (static) selects the
+        ring-lane graph once an SWA prompt's offset has lapped the
+        scratch (``offset >= lane rows``) — unwrapped chunks compile the
+        exact pre-ring program.
         """
         return prefill_chunk(cfg, params, tokens, cache, slot, offset,
-                             n_valid, lane, kv_fmt, with_head=with_head)
+                             n_valid, lane, kv_fmt, with_head=with_head,
+                             wrapped=wrapped)
 
     @staticmethod
     def _finish_prefill_fn(logits, key, temperature, cache, slot, t,
@@ -1262,6 +1324,16 @@ class ContinuousEngine:
         """Owning shard of ``slot`` for event records (unsharded: None)."""
         return None
 
+    def _reset_dispatch(self, slot: int) -> None:
+        """Device-side slot retirement (park pos, zero SSM state).
+
+        The ONE place a leaving slot's device state is reset — finish,
+        prefill abort, suspend, quarantine and shard-drain migration all
+        route through here, which is where the paged engine hooks page
+        release + block-table clearing.
+        """
+        self.cache = self._reset(self.cache, jnp.int32(slot))
+
     def _drop_lane_cursor(self, slot: int) -> None:
         """Forget any in-flight lane cursor feeding ``slot`` (abort path).
 
@@ -1331,7 +1403,7 @@ class ContinuousEngine:
         logits, self.cache, self.lane = self._lane_fn(
             self.params, chunk_toks, self.cache, self.lane,
             jnp.int32(slot), jnp.int32(off), jnp.int32(n_valid),
-            with_head=final)
+            with_head=final, wrapped=off >= self._lane_rows)
         pf["offset"] = off + n_valid
         if not final:
             return
@@ -1416,7 +1488,7 @@ class ContinuousEngine:
         """
         req = sched.release(slot)
         st = state.pop(slot, None)
-        self.cache = self._reset(self.cache, jnp.int32(slot))
+        self._reset_dispatch(slot)
         self._park_slot_flags(slot)
         out = st["out"] if st else []
         ttft = st["ttft"] if st else float("inf")
@@ -1440,7 +1512,7 @@ class ContinuousEngine:
         """Tear down a PREFILLING slot (cancel/deadline/suspend mid-lane)."""
         self._drop_lane_cursor(slot)
         req = sched.release(slot)
-        self.cache = self._reset(self.cache, jnp.int32(slot))
+        self._reset_dispatch(slot)
         self._park_slot_flags(slot)
         return req
 
@@ -1503,7 +1575,7 @@ class ContinuousEngine:
         snap = self._snapshot_slot(sched, state, slot, clock)
         req = sched.suspend_to_queue(slot, snap)
         state.pop(slot, None)
-        self.cache = self._reset(self.cache, jnp.int32(slot))
+        self._reset_dispatch(slot)
         self._park_slot_flags(slot)
         self._emit(event, uid=req.uid, slot=slot,
                    shard=self._shard_of(slot), n_gen=snap.n_gen,
@@ -1649,6 +1721,47 @@ class ContinuousEngine:
                    chunk=ck["chunk_idx"])
         return reqs, list(ck["results"])
 
+    # terminal journal kinds: a uid that reached one of these needs no
+    # replay (finish covers OK / FAILED; the queue-exit kinds cover the
+    # rest — ``requeue`` after a quarantine is NOT terminal, the later
+    # finish of the retry is)
+    _TERMINAL_KINDS = frozenset(("finish", "cancel", "expire", "shed"))
+
+    def restore_from_journal(self, requests: Sequence[Request],
+                             messages: Iterable[str]
+                             ) -> Tuple[List[Request], List[int]]:
+        """Rebuild the pending work of a crashed serve from its event log.
+
+        The cheap tier of crash recovery (DESIGN.md §12/§14): when no
+        checkpoint exists (or the checkpoint file died with the host),
+        the JSONL journal alone still says WHICH requests reached a
+        terminal state.  Given the original ``requests`` and the
+        captured log ``messages``, this returns the requests that still
+        owe a result — every one re-enters through a fresh prefill (no
+        snapshots: partially generated tokens of in-flight requests are
+        re-generated, bit-identically, from scratch) — plus the journal
+        sequence gaps ``replay`` detected (non-empty gaps mean the log
+        lost records and the pending set may over-serve).  Terminal
+        results themselves live in the caller's hands (the journal
+        records status, not tokens); this method only guarantees no
+        request is silently dropped.  The engine's journal cursor
+        resumes past the highest replayed record, so post-recovery
+        events extend the same sequence.  Use ``restore(path)`` when a
+        checkpoint IS available — it resumes mid-stream instead of
+        re-prefilling.
+        """
+        events, gaps = replay(messages)
+        done = {e["uid"] for e in events
+                if e.get("event") in self._TERMINAL_KINDS and "uid" in e}
+        seqs = [e["seq"] for e in events if isinstance(e.get("seq"), int)]
+        if seqs:
+            self.journal.seq = max(self.journal.seq, max(seqs) + 1)
+        pending = [dataclasses.replace(r, arrival_time=0.0)
+                   for r in requests if r.uid not in done]
+        self._emit("restore", source="journal", n=len(pending),
+                   replayed=len(events), gaps=len(gaps))
+        return pending, gaps
+
     def _lifecycle(self, sched: SlotScheduler, state: Dict[int, Any],
                    results: List[RequestResult], clock) -> None:
         """Chunk-boundary lifecycle sweep: cancels, deadlines, shedding.
@@ -1729,7 +1842,7 @@ class ContinuousEngine:
                        retries_left=req.retries, chunk=self._chunk_idx - 1)
             st = state.pop(slot, None)
             sched.release(slot)
-            self.cache = self._reset(self.cache, jnp.int32(slot))
+            self._reset_dispatch(slot)
             self._park_slot_flags(slot)
             if req.retries > 0:
                 sched.submit(dataclasses.replace(req,
@@ -1944,6 +2057,34 @@ class ContinuousEngine:
                 "offered": self.spec_offered,
                 "accept_rate": self.spec_accepted / off}
 
+    def _check_request(self, r: Request) -> None:
+        """Reject a request the engine cannot serve correctly, up front.
+
+        A full-cache slot would clamp-write its last row and return
+        garbage with no error (SWA caches are window-sized rings — they
+        wrap instead of overflowing), and a clamped lane write would
+        corrupt a chunked prefill silently — so both limits are hard
+        errors at submit, not runtime surprises.
+        """
+        if not self.cfg.sliding_window and \
+                len(r.tokens) + r.max_new > self.max_len:
+            raise ValueError(
+                f"request uid={r.uid}: prompt ({len(r.tokens)}) + "
+                f"max_new ({r.max_new}) exceeds max_len "
+                f"({self.max_len})")
+        # the lane scratch is indexed by ABSOLUTE offset (bit-equality
+        # needs natural order), so prompts must fit it — unless the lane
+        # is a ring too (``_lane_ring``), where writes wrap modulo
+        # ``_lane_rows`` and chunked admission accepts any prompt length
+        # a whole prefill of the same SWA model would
+        if self.prefill_mode == "chunked" and not self._lane_ring and \
+                len(r.tokens) > self._lane_rows:
+            raise ValueError(
+                f"request uid={r.uid}: prompt ({len(r.tokens)}) "
+                f"exceeds the prefill-lane scratch "
+                f"({self._lane_rows} rows) — raise max_len or use "
+                f"prefill_mode='whole'")
+
     def serve(self, requests: List[Request], progress_cb=None,
               fault_plan=None) -> List[RequestResult]:
         """Drain ``requests`` (honoring arrival times) through the slots.
@@ -1975,25 +2116,7 @@ class ContinuousEngine:
         self._suspend_uids.clear()  # PAST serve
         sched = self._make_sched()
         for r in requests:
-            # reject overflow up front: a full-cache slot would clamp-write
-            # its last row and return garbage with no error (SWA caches are
-            # window-sized rings — they wrap instead of overflowing)
-            if not self.cfg.sliding_window and \
-                    len(r.tokens) + r.max_new > self.max_len:
-                raise ValueError(
-                    f"request uid={r.uid}: prompt ({len(r.tokens)}) + "
-                    f"max_new ({r.max_new}) exceeds max_len "
-                    f"({self.max_len})")
-            # the lane scratch is indexed by ABSOLUTE offset (bit-equality
-            # needs natural order), so even ring-cached prompts must fit
-            # it — a clamped lane write would corrupt silently
-            if self.prefill_mode == "chunked" and \
-                    len(r.tokens) > self._lane_rows:
-                raise ValueError(
-                    f"request uid={r.uid}: prompt ({len(r.tokens)}) "
-                    f"exceeds the prefill-lane scratch "
-                    f"({self._lane_rows} rows) — raise max_len or use "
-                    f"prefill_mode='whole'")
+            self._check_request(r)
             sched.submit(r)
         # re-park everything at entry: a normal drain leaves exactly this
         # state, but an ABORTED previous serve (exception mid-prefill,

@@ -111,6 +111,10 @@ class ShardedContinuousEngine(ContinuousEngine):
         self._drained: set = set()
         self._drain_req: set = set()
         super().__init__(cfg, params, policy, n_slots=n_slots, **kw)
+        # the fused S-lane dispatch doesn't thread the ring-wrap graph
+        # (one static trace serves all shards); long-SWA chunked
+        # admission past the lane scratch stays an unsharded feature
+        self._lane_ring = False
 
     # -- placement ----------------------------------------------------------
 
@@ -128,13 +132,23 @@ class ShardedContinuousEngine(ContinuousEngine):
             cache[n]) for n in cache}
         return jax.device_put(cache, put)
 
+    def _cache_eval_shape(self):
+        """Abstract cache pytree the per-group shard specs derive from.
+
+        Overridable so layout variants (the paged cache) shard through
+        the same program-building path: ``slot_cache_specs`` maps each
+        group's batch-prefix spec over whatever leaves the layout has.
+        """
+        cfg, kv, max_len = self.cfg, self._kv, self.max_len
+        return jax.eval_shape(
+            lambda: init_cache(cfg, self.n_slots, max_len, kv))
+
     # -- shard_map'd programs ------------------------------------------------
 
     def _build_programs(self) -> None:
         cfg, kv, max_len = self.cfg, self._kv, self.max_len
         mesh, mk, nloc = self.mesh, self._mesh_key, self.slots_per_shard
-        cspec = self._cspec = slot_cache_specs(jax.eval_shape(
-            lambda: init_cache(cfg, self.n_slots, max_len, kv)))
+        cspec = self._cspec = slot_cache_specs(self._cache_eval_shape())
 
         def admit_body(params, batch, cache, slot, key, temperature):
             # owner-only prefill (ROADMAP pod-scale item): the batch-1
@@ -472,7 +486,7 @@ class ShardedContinuousEngine(ContinuousEngine):
                 snap = self._snapshot_slot(sched, state, slot, clock)
                 req = sched.reassign(slot, tgt)
                 state.pop(slot, None)
-                self.cache = self._reset(self.cache, jnp.int32(slot))
+                self._reset_dispatch(slot)
                 self._park_slot_flags(slot)
                 self._resume(sched, state, tgt, req, snap, clock,
                              event="migrate")

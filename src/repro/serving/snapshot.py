@@ -39,12 +39,18 @@ _ROW_LEAVES = frozenset(_KV_LEAVES)  # leaves with a sequence-row axis (2)
 def slot_row_capacity(cache: Dict[str, Any]) -> Optional[int]:
     """Row capacity (window or max_len) of the cache's KV leaves.
 
-    ``None`` for caches without attention KV (pure SSM) — nothing to
-    trim or pad there.
+    For a PAGED cache (DESIGN.md §14) the logical capacity is the block
+    table's pages-per-slot times the pool's page size — the same number
+    the dense layout stores directly, so snapshots from either engine
+    interchange.  ``None`` for caches without attention KV (pure SSM) —
+    nothing to trim or pad there.
     """
     layers = cache.get("layers")
     if layers is None:
         return None
+    if "block" in layers:
+        pool = next(v for n, v in layers.items() if n.startswith("pool_"))
+        return int(layers["block"].shape[2]) * int(pool.shape[2])
     for name in _KV_LEAVES:
         if name in layers:
             return int(layers[name].shape[2])

@@ -163,17 +163,28 @@ def test_chunked_admission_seeded_sampling_and_stop():
 
 
 def test_chunked_rejects_prompt_beyond_lane_scratch():
-    """SWA rings wrap the LIVE cache, so whole-mode accepts prompts past
-    max_len — but the lane scratch is absolute-indexed: a longer prompt
-    must fail loudly instead of clamp-writing over live lane rows."""
+    """The lane scratch only rings when it covers a full SWA window plus
+    an incoming chunk (``_lane_ring``); below that, a prompt past the
+    scratch must still fail loudly instead of clamp-writing over rows the
+    next chunk attends.  A scratch that DOES clear the bound admits the
+    same prompt by wrapping (bit-equality vs whole is asserted in
+    tests/test_paged.py::test_paged_ring_lane_admits_swa_prompt_past_max_len)."""
     cfg = get_smoke_config("h2o_danube_3_4b")       # sliding_window=32
-    eng = ContinuousEngine(cfg, _params(cfg),
-                           QuantPolicy(weight_fmt=None, kv_fmt=None),
-                           n_slots=2, max_len=64, chunk=4,
+    policy = QuantPolicy(weight_fmt=None, kv_fmt=None)
+    # 32-row scratch < window (32) + p_chunk (32): ring OFF, loud reject
+    eng = ContinuousEngine(cfg, _params(cfg), policy,
+                           n_slots=2, max_len=32, chunk=4,
                            prefill_mode="chunked", p_chunk=32)
+    assert not eng._lane_ring
     bad = Request(uid=0, tokens=np.zeros((100,), np.int32), max_new=4)
     with pytest.raises(ValueError, match="lane scratch"):
         eng.serve([bad])
+    # 64-row scratch >= 32 + 32: ring ON, the same prompt is admitted
+    eng = ContinuousEngine(cfg, _params(cfg), policy,
+                           n_slots=2, max_len=64, chunk=4,
+                           prefill_mode="chunked", p_chunk=32)
+    assert eng._lane_ring
+    eng._check_request(bad)                         # no raise
 
 
 def test_chunked_rejects_bad_chunk_sizes():
