@@ -72,6 +72,35 @@ def run(csv: Csv):
             f"reduction_range=[{lo:.1%};{hi:.1%}] paper_band=[10%;45%]")
     assert lo > 0.05, reductions  # NxFP4 must beat MxFP4 everywhere
 
+    # ACTIVATION-side formats (§15): asymmetric dual-scale (AMXFP) and
+    # block-max code recycling (MX+, `_ox`) vs symmetric MxFP4 on the two
+    # activation pathologies the paper motivates them with — sign-skewed
+    # post-nonlinearity magnitudes and per-block channel outliers.
+    rng = np.random.default_rng(0)
+    skew = np.abs(rng.standard_normal((_N_BLOCKS, 32))).astype(np.float32)
+    skew[:, 16:] *= -0.08           # GELU-ish: small negative tail
+    outlier = rng.standard_normal((_N_BLOCKS, 32)).astype(np.float32)
+    outlier[:, 0] *= 18.0           # one loud channel per block
+    act_fmts = ["mxfp4", "amxfp4", "mxfp4_ox", "amxfp4_ox"]
+    for name, arr in [("sign-skew", skew), ("outlier", outlier)]:
+        x = jnp.asarray(arr)
+        mse = {}
+        for f in act_fmts:
+            d = fake_quant(x, f, axis=-1)
+            mse[f] = float(jnp.mean(jnp.square(
+                d.astype(jnp.float32) - arr)))
+        am = 1 - mse["amxfp4"] / mse["mxfp4"]
+        ox = 1 - mse["mxfp4_ox"] / mse["mxfp4"]
+        both = 1 - mse["amxfp4_ox"] / mse["mxfp4"]
+        csv.add(f"fig8/act-{name}", 0.0,
+                f"AM={am:.1%} OX={ox:.1%} AM+OX={both:.1%} "
+                f"mxfp4_mse={mse['mxfp4']:.3e}")
+        # the codecs must not lose to the symmetric baseline on the
+        # pathology they were built for
+        assert mse["amxfp4"] < mse["mxfp4"], mse
+        assert mse["mxfp4_ox"] < mse["mxfp4"], mse
+        assert mse["amxfp4_ox"] < mse["mxfp4"], mse
+
 
 def main():
     csv = Csv()

@@ -56,6 +56,24 @@ def run(csv: Csv):
                 f"hbm_reduction={w.size * 2 / q.nbytes():.2f}x "
                 f"rel_err={err:.2e}")
 
+    # quantized x quantized GEMM (§15): BOTH operands packed through the
+    # fused dual-dequant path (XLA math of the nxfp_qq_matmul kernel).
+    # The derived field carries the ACTIVATION-side HBM reduction — the
+    # operand the qq path newly compresses; the weight side is priced in
+    # the rows above.
+    for xf in ["amxfp4", "mxfp4_ox"]:
+        xq = quantize_qtensor(x, xf, axis=-1)
+        q = wq["nxfp4"]
+        fn = jax.jit(lambda a, qq=q: qmatmul(a, qq, impl="xla"))
+        us, y = timed(fn, xq)
+        err = float(jnp.max(jnp.abs(y - ref)) / jnp.max(jnp.abs(ref)))
+        act_bytes = int(np.prod(xq.packed.shape)) + \
+            int(np.prod(xq.meta.shape)) * xq.meta.dtype.itemsize
+        csv.add(f"kernels/qq-matmul/{xf}-x-nxfp4", us,
+                f"act_packed_bytes={act_bytes} "
+                f"act_hbm_reduction={x.size * 2 / act_bytes:.2f}x "
+                f"rel_err={err:.2e}")
+
     # quantize throughput (Algorithm 1): fused encode+pack vs seed pipeline
     rows = 1024 if _quick() else 4096
     big = jnp.asarray(rng.standard_normal((rows, 512)).astype(np.float32))

@@ -16,7 +16,22 @@ scale, plus the three NxFP techniques:
   - ``cr``  Code Recycling: the sign-magnitude "-0" code (10...0) is remapped
             to -(smallest positive level)/2 (sweepable).
 
-Per-block metadata cost: 8 (shared exponent) + 2*nm + 1*am bits.
+plus the two activation-side techniques (DESIGN.md §15):
+
+  - ``asym`` Asymmetric microscaling (AMXFP, arxiv 2411.09909): separate
+            shared scales for the positive and negative halves of the block
+            — activations after GLU/softmax-adjacent nonlinearities are
+            heavily sign-skewed, and a per-sign scale absorbs that skew
+            without spending element bits on it.
+  - ``ox``  Outlier-max mantissa (MX+, arxiv 2510.14557): the block max
+            always saturates to the top code, so its code slot carries no
+            information — re-use it for ``bits-1`` extra mantissa bits of
+            the max element (decoded absolutely off the shared exponent),
+            and store the max's 5-bit block index in the free meta bits.
+
+Per-block metadata cost: 8 (shared exponent) + 2*nm + 1*am bits, plus
+5 (``ox`` index) and 8 + 2*nm (``asym`` negative-side scale) — asymmetric
+formats need a uint32 meta word, everything else still fits uint16.
 """
 from __future__ import annotations
 
@@ -90,6 +105,8 @@ class BlockFormat:
     bfp_elem: Optional[str] = None
     nano_search: str = "paper"        # "paper" (Alg. 1: {round, 0}) | "exhaustive"
     recycle: Union[str, float] = "half_smallest"
+    asym: bool = False                # per-sign dual scale (AMXFP)
+    ox: bool = False                  # block-max code slot -> extra mantissa
 
     def __post_init__(self):
         if self.am:
@@ -98,6 +115,17 @@ class BlockFormat:
             assert (self.mx_elem is None) != (self.bfp_elem is None), (
                 "non-AM formats use exactly one element format"
             )
+        if self.asym:
+            # the CR window test runs in scaled units of ONE shared scale;
+            # with per-sign scales the remap is ill-defined — disallowed.
+            assert not self.cr, "asym formats do not support code recycling"
+        if self.ox:
+            # 5-bit meta index addresses the block max; the recycled slot's
+            # raw code would collide with CR's 10...0 remap, and AM would
+            # need a per-format emax select at decode — keep ox orthogonal.
+            assert self.block_size <= 32, "ox index is 5 bits (block_size<=32)"
+            assert not self.cr, "ox re-uses the -0-adjacent code space; no CR"
+            assert not self.am, "ox decode assumes a single element format"
 
     @property
     def elem_formats(self):
@@ -111,7 +139,20 @@ class BlockFormat:
 
     @property
     def meta_bits(self) -> int:
-        return 8 + (2 if self.nm else 0) + (1 if self.am else 0)
+        return (8 + (2 if self.nm else 0) + (1 if self.am else 0)
+                + (5 if self.ox else 0)
+                + ((8 + (2 if self.nm else 0)) if self.asym else 0))
+
+    @property
+    def meta_dtype(self) -> str:
+        """Storage dtype of the packed per-block meta word.
+
+        The asymmetric layout (E_pos | nano_pos | fmt | ox_idx | E_neg |
+        nano_neg = up to 26 bits) needs a uint32; every symmetric format —
+        including symmetric+ox, whose index tops out at bit 15 — keeps the
+        seed uint16 word.
+        """
+        return "uint32" if self.asym else "uint16"
 
     @property
     def bits_per_value(self) -> float:
@@ -125,9 +166,9 @@ class BlockFormat:
 
 
 _FMT_RE = re.compile(
-    r"^(?P<family>bfp|mxfp|nxfp)(?P<bits>\d)"
+    r"^(?P<family>amxfp|bfp|mxfp|nxfp)(?P<bits>\d)"
     r"(?P<elem>_e\dm\d)?"
-    r"(?P<techs>(_nm|_am|_cr)*)"
+    r"(?P<techs>(_nm|_am|_cr|_ox)*)"
     r"(_bs(?P<bs>\d+))?$"
 )
 
@@ -146,6 +187,9 @@ def get_format(name: str) -> BlockFormat:
         nxfp4_nm_am     NxFP ablation: NM + Adaptive Microexponent
         mxfp4_cr        MxFP4 + code recycling (Fig. 11 sweep)
         nxfp4_bs16      NxFP4 with block size 16 (Fig. 12 sweep)
+        amxfp4          asymmetric MxFP4 (AMXFP activation format)
+        amxfp4_ox       AMXFP4 + block-max outlier mantissa (MX+-style)
+        mxfp4_ox        symmetric MxFP4 + outlier mantissa
     """
     m = _FMT_RE.match(name)
     if not m:
@@ -162,6 +206,7 @@ def get_format(name: str) -> BlockFormat:
             name=name, bits=bits, block_size=bs,
             nm="_nm" in techs, am=False, cr="_cr" in techs,
             mx_elem=None, bfp_elem=_BFP_ELEM_BY_BITS[bits],
+            ox="_ox" in techs,
         )
     if family == "mxfp":
         mx = elem or _MX_ELEM_BY_BITS[bits]
@@ -170,6 +215,22 @@ def get_format(name: str) -> BlockFormat:
             name=name, bits=bits, block_size=bs,
             nm="_nm" in techs, am=False, cr="_cr" in techs,
             mx_elem=mx, bfp_elem=None,
+            ox="_ox" in techs,
+        )
+    if family == "amxfp":
+        # asymmetric activation microscaling (AMXFP): per-sign dual scale
+        # over MxFP elements; NM / AM / OX compose, CR cannot (see
+        # BlockFormat.__post_init__).
+        if "_cr" in techs:
+            raise ValueError(f"{name!r}: asym formats do not support _cr")
+        mx = elem or _MX_ELEM_BY_BITS[bits]
+        assert ELEMENT_FORMATS[mx].bits == bits
+        am = "_am" in techs
+        return BlockFormat(
+            name=name, bits=bits, block_size=bs,
+            nm="_nm" in techs, am=am, cr=False,
+            mx_elem=mx, bfp_elem=_BFP_ELEM_BY_BITS[bits] if am else None,
+            asym=True, ox="_ox" in techs,
         )
     # nxfp: default = all three techniques; explicit suffixes select subsets.
     nm = "_nm" in techs or techs == ""
@@ -180,4 +241,5 @@ def get_format(name: str) -> BlockFormat:
         name=name, bits=bits, block_size=bs,
         nm=nm, am=am, cr=cr,
         mx_elem=mx, bfp_elem=_BFP_ELEM_BY_BITS[bits] if am else None,
+        ox="_ox" in techs,
     )

@@ -91,7 +91,9 @@ class QTensor:
     # -- accounting ----------------------------------------------------------
     def nbytes(self) -> int:
         import numpy as np
-        return int(np.prod(self.packed.shape)) + 2 * int(np.prod(self.meta.shape))
+        meta_itemsize = self.meta.dtype.itemsize  # uint16, uint32 for asym
+        return (int(np.prod(self.packed.shape))
+                + meta_itemsize * int(np.prod(self.meta.shape)))
 
     def bits_per_value(self) -> float:
         import numpy as np

@@ -22,6 +22,14 @@ Semantics (per block of ``block_size`` values):
 
 Per-block metadata is packed into a uint16:
   bits[0:8] = E_shared + 128, bits[8:10] = nano, bit[10] = fmt (1 = MxFP).
+
+The activation-side formats (DESIGN.md §15) extend the word in the free
+high bits — symmetric+ox stays uint16, asymmetric needs uint32:
+  bits[11:16] = ox block-max index (``ox``),
+  bits[16:24] = E_neg + 128, bits[24:26] = nano_neg (``asym``).
+A stored low byte of 0 marks an all-zero ox block (the raw byte is
+otherwise always >= 2 because E_shared clips at -126), which gates the
+outlier substitution off at decode.
 """
 from __future__ import annotations
 
@@ -152,8 +160,15 @@ def quantize_blocks(xb, fmt: BlockFormat, return_debug: bool = False):
 
     Returns:
       codes: (..., nb, block_size) uint8
-      meta:  (..., nb) uint16
+      meta:  (..., nb) uint16 (uint32 for asymmetric formats)
     """
+    if fmt.asym or fmt.ox:
+        # the searchsorted reference has no notion of per-sign scales or
+        # the outlier slot; for the activation-side formats the arithmetic
+        # encoder IS the reference (one canonical implementation).
+        assert not return_debug, "debug path is symmetric-only"
+        codes, meta = arith_encode_blocks(xb, fmt)
+        return codes.astype(jnp.uint8), meta.astype(jnp.dtype(fmt.meta_dtype))
     xb = jnp.nan_to_num(xb.astype(jnp.float32), posinf=1e30, neginf=-1e30)
     vmax = jnp.max(jnp.abs(xb), axis=-1)
 
@@ -181,8 +196,58 @@ def quantize_blocks(xb, fmt: BlockFormat, return_debug: bool = False):
     return codes, meta
 
 
+def _dequantize_blocks_ex(codes, meta, fmt: BlockFormat, dtype):
+    """Decode the activation-side formats: per-sign dual scale (``asym``)
+    and/or the outlier-mantissa slot (``ox``) — meta layout in the module
+    docstring.  Element values still come from the level LUTs; the sign of
+    the DECODED value selects the scale, and the stored block-max index
+    substitutes the absolute outlier value ``±(1 + m/2^(bits-1)) *
+    2^(E_sign + emax)`` read straight from the code's bit fields."""
+    m = meta.astype(jnp.int32)
+    e_p = (m & 0xFF) - _E_BIAS
+    scale_p = jnp.ldexp(
+        1.0 + ((m >> 8) & 0x3).astype(jnp.float32) * 0.25, e_p)
+    fmt_bit = (m >> 10) & 0x1
+    luts = {fb: jnp.asarray(level_table(el.name, fmt.cr, fmt.recycle).decode)
+            for fb, el in fmt.elem_formats}
+    c = codes.astype(jnp.int32)
+    if fmt.am:
+        v = jnp.where((fmt_bit == 1)[..., None], luts[1][c], luts[0][c])
+    else:
+        v = next(iter(luts.values()))[c]
+    if fmt.asym:
+        e_n = ((m >> 16) & 0xFF) - _E_BIAS
+        scale_n = jnp.ldexp(
+            1.0 + ((m >> 24) & 0x3).astype(jnp.float32) * 0.25, e_n)
+        out = v * jnp.where(v < 0, scale_n[..., None], scale_p[..., None])
+    else:
+        e_n = e_p
+        out = v * scale_p[..., None]
+    if fmt.ox:
+        elem = fmt.elem_formats[0][1]
+        emax = level_table(elem.name, False, fmt.recycle).emax
+        bits = fmt.bits
+        mb = bits - 1
+        sign = (c >> (bits - 1)) & 1
+        mag = c & ((1 << mb) - 1)
+        if fmt.asym:
+            e_used = jnp.where(sign == 1, e_n[..., None], e_p[..., None])
+        else:
+            e_used = jnp.broadcast_to(e_p[..., None], sign.shape)
+        vox = (1.0 + mag.astype(jnp.float32) * np.float32(0.5 ** mb)) \
+            * pow2i(e_used + emax)
+        vox = jnp.where(sign == 1, -vox, vox)
+        iota = jax.lax.broadcasted_iota(jnp.int32, c.shape, c.ndim - 1)
+        idx = (m >> 11) & 0x1F
+        sub = (iota == idx[..., None]) & ((m & 0xFF) != 0)[..., None]
+        out = jnp.where(sub, vox, out)
+    return out.astype(dtype)
+
+
 def dequantize_blocks(codes, meta, fmt: BlockFormat, dtype=jnp.float32):
     """Decode blocked codes. codes (..., nb, B) uint8; meta (..., nb) uint16."""
+    if fmt.asym or fmt.ox:
+        return _dequantize_blocks_ex(codes, meta, fmt, dtype)
     e_shared, nano, fmt_bit = meta_fields(meta)
     scale = jnp.ldexp(1.0 + nano.astype(jnp.float32) * 0.25, e_shared)
     luts = {fb: jnp.asarray(level_table(el.name, fmt.cr, fmt.recycle).decode)
@@ -314,32 +379,53 @@ def quantize_blocks_arith(xb, fmt: BlockFormat):
         "quantize_blocks_arith supports only the default CR remap; use "
         "quantize_blocks for custom recycle sweeps")
     codes, meta = arith_encode_blocks(xb, fmt)
-    return codes.astype(jnp.uint8), meta.astype(jnp.uint16)
+    return codes.astype(jnp.uint8), meta.astype(jnp.dtype(fmt.meta_dtype))
 
 
 def _encode_candidate_arith(xb, vmax, vmax_e, fmt_bit, nano_mode, table,
-                            cr: bool):
+                            cr: bool, vmax_n=None, vmax_n_e=None,
+                            ox: bool = False):
     """Arithmetic encode of one (element format x nano) candidate.
 
     Pure jnp on f32/int32 only — every op (including the exponent-bit
     pow2i/floor_log2_bits and the mantissa-field extraction below) is
     legal inside a Pallas kernel body; the fused TPU kernel calls exactly
     this function, so kernel/XLA bit-identity holds by construction.
+
+    ``vmax_n``/``vmax_n_e`` (asymmetric formats): ``vmax`` then carries the
+    POSITIVE-side block max and these the negative side; each side gets its
+    own shared exponent + nano and elements scale by their sign's scale.
+    ``ox``: after the grid snap, the block max's code slot is overwritten
+    with ``bits-1`` extra mantissa bits of the max (sign in the top bit)
+    and its index recorded in meta bits [11:16]; the candidate MSE includes
+    the substituted value so Alg. 1 search stays well-defined.
     """
     elem = table.fmt
     bits, mbits, bias = elem.bits, elem.mbits, elem.bias
     max_pos = np.float32(table.max_pos)
-    e_shared = jnp.clip(vmax_e - table.emax, -126, 127)
-    scale0 = pow2i(e_shared)
-    if nano_mode is None:
-        nano = jnp.zeros_like(e_shared)
-    elif nano_mode == "round":
-        r = vmax / (scale0 * max_pos)
-        nano = jnp.clip(jnp.round((r - 1.0) * 4.0), 0, 3).astype(jnp.int32)
+
+    def _side(vm, vm_e):
+        e_sh = jnp.clip(vm_e - table.emax, -126, 127)
+        scale0 = pow2i(e_sh)
+        if nano_mode is None:
+            nano = jnp.zeros_like(e_sh)
+        elif nano_mode == "round":
+            r = vm / (scale0 * max_pos)
+            nano = jnp.clip(jnp.round((r - 1.0) * 4.0), 0, 3).astype(jnp.int32)
+        else:
+            nano = jnp.full_like(e_sh, int(nano_mode))
+        return e_sh, nano, scale0 * (1.0 + nano.astype(jnp.float32) * 0.25)
+
+    e_shared, nano, scale = _side(vmax, vmax_e)
+    asym = vmax_n is not None
+    if asym:
+        assert not cr, "asym encode does not support code recycling"
+        e_shared_n, nano_n, scale_n = _side(vmax_n, vmax_n_e)
+        neg_in = (xb < 0)
+        vp = xb * jnp.where(neg_in, (1.0 / scale_n)[..., None],
+                            (1.0 / scale)[..., None])
     else:
-        nano = jnp.full_like(e_shared, int(nano_mode))
-    scale = scale0 * (1.0 + nano.astype(jnp.float32) * 0.25)
-    vp = xb * (1.0 / scale)[..., None]
+        vp = xb * (1.0 / scale)[..., None]
     a = jnp.abs(vp)
     neg = vp < 0
 
@@ -380,9 +466,48 @@ def _encode_candidate_arith(xb, vmax, vmax_e, fmt_bit, nano_mode, table,
               (vp < np.float32(-0.25 * smallest))
         codes = jnp.where(win, 1 << (bits - 1), codes)
         val = jnp.where(win, np.float32(-0.5 * smallest), val)
-    deq = val * scale[..., None]
-    mse = jnp.mean(jnp.square(deq - xb), axis=-1)
+    if asym:
+        deq = val * jnp.where(neg, scale_n[..., None], scale[..., None])
+    else:
+        deq = val * scale[..., None]
     meta = (e_shared + _E_BIAS) | (nano << 8) | (fmt_bit << 10)
+    if ox:
+        # first-argmax index of |x| (iota-min over the is-max mask — no
+        # argmax primitive needed, Pallas-safe); the max element's slot is
+        # re-coded as sign | bits-1 mantissa bits of the max value itself,
+        # decoded absolutely off its sign's shared exponent.
+        bs = xb.shape[-1]
+        iota = jax.lax.broadcasted_iota(jnp.int32, xb.shape, xb.ndim - 1)
+        vtot = jnp.maximum(vmax, vmax_n) if asym else vmax
+        ismax = jnp.abs(xb) >= vtot[..., None]
+        idx = jnp.min(jnp.where(ismax, iota, bs), axis=-1)
+        at = iota == idx[..., None]
+        neg_ox = jnp.any(at & (xb < 0), axis=-1)
+        if asym:
+            e_v = jnp.where(neg_ox, vmax_n_e, vmax_e)
+            vm_sel = jnp.where(neg_ox, vmax_n, vmax)
+            e_used = jnp.where(neg_ox, e_shared_n, e_shared)
+        else:
+            e_v, vm_sel, e_used = vmax_e, vmax, e_shared
+        mb = bits - 1
+        frac = vm_sel * pow2i(-e_v) - 1.0
+        m_ox = jnp.clip(jnp.round(frac * np.float32(2.0 ** mb)), 0,
+                        (1 << mb) - 1).astype(jnp.int32)
+        code_ox = jnp.where(neg_ox, 1 << mb, 0) | m_ox
+        v_ox = (1.0 + m_ox.astype(jnp.float32) * np.float32(0.5 ** mb)) \
+            * pow2i(e_used + table.emax)
+        v_ox = jnp.where(neg_ox, -v_ox, v_ox)
+        has = vtot > 0
+        sub = at & has[..., None]
+        codes = jnp.where(sub, code_ox[..., None], codes)
+        deq = jnp.where(sub, v_ox[..., None], deq)
+        meta = meta | (idx << 11)
+        # all-zero blocks: zero the raw E byte so decode's substitution
+        # gate stays off (prefill padding rows are exactly this case)
+        meta = jnp.where(has, meta, meta & ~jnp.int32(0xFF))
+    if asym:
+        meta = meta | ((e_shared_n + _E_BIAS) << 16) | (nano_n << 24)
+    mse = jnp.mean(jnp.square(deq - xb), axis=-1)
     return codes, meta, mse
 
 
@@ -393,7 +518,15 @@ def arith_encode_blocks(xb, fmt: BlockFormat):
     kernel body of ``repro.kernels.nxfp_quantize`` run this exact code.
     """
     xb = jnp.nan_to_num(xb.astype(jnp.float32), posinf=1e30, neginf=-1e30)
-    vmax = jnp.max(jnp.abs(xb), axis=-1)
+    if fmt.asym:
+        # per-sign block maxima: each side's shared exponent is fit to its
+        # own half of the value range (AMXFP dual scale)
+        vmax = jnp.max(jnp.maximum(xb, 0.0), axis=-1)
+        vmax_n = jnp.max(jnp.maximum(-xb, 0.0), axis=-1)
+        extra = dict(vmax_n=vmax_n, vmax_n_e=floor_log2_bits(vmax_n))
+    else:
+        vmax = jnp.max(jnp.abs(xb), axis=-1)
+        extra = {}
     vmax_e = floor_log2_bits(vmax)          # shared across candidates
 
     best_mse = jnp.full(vmax.shape, jnp.inf, jnp.float32)
@@ -401,7 +534,8 @@ def arith_encode_blocks(xb, fmt: BlockFormat):
     best_meta = jnp.zeros(vmax.shape, jnp.int32)
     for ci, (fmt_bit, table, nano_mode) in enumerate(_candidates(fmt)):
         codes, meta, mse = _encode_candidate_arith(
-            xb, vmax, vmax_e, fmt_bit, nano_mode, table, fmt.cr)
+            xb, vmax, vmax_e, fmt_bit, nano_mode, table, fmt.cr,
+            ox=fmt.ox, **extra)
         # strict less, first candidate unconditional: matches the
         # reference argmin tie-breaking AND keeps huge blocks (mse
         # overflowing to inf) encoded instead of falling through to

@@ -15,11 +15,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import BlockFormat, ELEMENT_FORMATS
+from repro.core.levels import level_table
 from repro.core.pack import pack_tile
 from repro.core.quantize import pow2i  # canonical definition (re-export)
 
 __all__ = ["pow2i", "decode_elem", "decode_scale", "decode_block_values",
-           "byte_routes", "unpack_codes_pallas"]
+           "decode_block_values_ex", "byte_routes", "unpack_codes_pallas"]
 
 
 def decode_elem(codes, elem_name: str, cr: bool):
@@ -69,6 +70,8 @@ def decode_block_values(codes, meta, fmt: BlockFormat):
     Mirrors ``repro.core.quantize.dequantize_blocks`` exactly (bit-identical:
     level values and scales are exact in f32 in both paths).
     """
+    if fmt.asym or fmt.ox:
+        return decode_block_values_ex(codes, meta, fmt)
     scale, fmt_bit = decode_scale(meta)
     vals = None
     for fb, elem in fmt.elem_formats:
@@ -76,6 +79,56 @@ def decode_block_values(codes, meta, fmt: BlockFormat):
         vals = v if vals is None else jnp.where(
             (fmt_bit == fb)[..., None], v, vals)
     return vals * scale[..., None]
+
+
+def decode_block_values_ex(codes, meta, fmt: BlockFormat):
+    """Arithmetic decode of the activation-side formats (``asym`` / ``ox``).
+
+    Mirrors ``repro.core.quantize._dequantize_blocks_ex`` bit-exactly, with
+    the element LUT replaced by ``decode_elem`` and ``ldexp`` by the
+    exponent-bit ``pow2i`` assembly — every op is Pallas-legal, so the qq
+    matmul kernel's dual decode tile runs exactly this function. ``meta``
+    carries uint32 semantics for asymmetric formats (callers pass int32;
+    26 meta bits fit losslessly).
+    """
+    m = meta.astype(jnp.int32)
+    e_p = (m & 0xFF) - 128
+    scale_p = (1.0 + ((m >> 8) & 0x3).astype(jnp.float32) * 0.25) * pow2i(e_p)
+    fmt_bit = (m >> 10) & 0x1
+    c = codes.astype(jnp.int32)
+    vals = None
+    for fb, elem in fmt.elem_formats:
+        v = decode_elem(c, elem.name, fmt.cr)
+        vals = v if vals is None else jnp.where(
+            (fmt_bit == fb)[..., None], v, vals)
+    if fmt.asym:
+        e_n = ((m >> 16) & 0xFF) - 128
+        scale_n = (1.0 + ((m >> 24) & 0x3).astype(jnp.float32) * 0.25) \
+            * pow2i(e_n)
+        out = vals * jnp.where(vals < 0, scale_n[..., None],
+                               scale_p[..., None])
+    else:
+        e_n = e_p
+        out = vals * scale_p[..., None]
+    if fmt.ox:
+        elem = fmt.elem_formats[0][1]
+        emax = level_table(elem.name, False, fmt.recycle).emax
+        bits = fmt.bits
+        mb = bits - 1
+        sign = (c >> mb) & 1
+        mag = c & ((1 << mb) - 1)
+        if fmt.asym:
+            e_used = jnp.where(sign == 1, e_n[..., None], e_p[..., None])
+        else:
+            e_used = jnp.broadcast_to(e_p[..., None], sign.shape)
+        vox = (1.0 + mag.astype(jnp.float32) * (0.5 ** mb)) \
+            * pow2i(e_used + emax)
+        vox = jnp.where(sign == 1, -vox, vox)
+        iota = jax.lax.broadcasted_iota(jnp.int32, c.shape, c.ndim - 1)
+        idx = (m >> 11) & 0x1F
+        sub = (iota == idx[..., None]) & ((m & 0xFF) != 0)[..., None]
+        out = jnp.where(sub, vox, out)
+    return out
 
 
 def byte_routes(n_codes: int, bits: int, n_bytes: int, code_axis: int):

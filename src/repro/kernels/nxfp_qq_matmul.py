@@ -1,0 +1,121 @@
+"""Fused quantized x quantized GEMM (Pallas, TPU target) — DESIGN.md §15.
+
+Computes ``y = dequant(Xq) @ dequant(Wq)`` where BOTH operands stream
+*packed* HBM -> VMEM: the activation tensor is quantized along its feature
+(contraction) axis by the fused quantizer (``nxfp_quantize.py``, AMXFP/ox
+activation formats), the weight along axis 0 of its (K, N) layout as in
+``nxfp_matmul.py``. Each grid step decodes one activation row-block tile
+and one weight row-block tile arithmetically on the VPU (dual decode tile)
+and feeds the MAC on the MXU — prefill GEMM HBM traffic drops to
+``(bits_x + bits_w)/32`` of the bf16 baseline and the separate
+dequant->matmul round trip for activations disappears.
+
+Memory layout (both produced by ``quantize_qtensor``):
+
+  x packed: (M, KB, bpb_x) uint8   blocks along the contraction dim
+  x meta:   (M, KB) uint16/uint32  (int32 in-kernel; asym meta is 26 bits)
+  w packed: (N, KB, bpb_w) uint8
+  w meta:   (N, KB) uint16
+
+Tiling: grid (M/TM, N/TN, K/TK), K innermost; TK a multiple of the (shared)
+quantization block size so blocks never straddle a VMEM tile, and of the
+two-block pack tile for 5/6-bit widths (ops.py picks tiles that satisfy
+BOTH formats). Zero-padded packed rows decode to exact zeros (meta 0 keeps
+the ox substitution gate off), so M padding is free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import BlockFormat
+from .decode_lib import decode_block_values, unpack_codes_pallas
+
+__all__ = ["nxfp_qq_matmul_pallas"]
+
+
+def _decode_tile(p_ref, m_ref, fmt: BlockFormat):
+    """Dequantize one (R, KB_t, bpb) packed tile to a bf16 (R, TK) tile.
+
+    Shared by both operands; ``decode_block_values`` dispatches to the
+    extended arithmetic decode for asym/ox activation formats.
+    """
+    codes = unpack_codes_pallas(p_ref[...], fmt.bits)        # (R, KB_t, B)
+    vals = decode_block_values(codes, m_ref[...], fmt)
+    r, kb, b = vals.shape
+    return vals.reshape(r, kb * b).astype(jnp.bfloat16)      # (R, TK)
+
+
+def _kernel(xp_ref, xm_ref, wp_ref, wm_ref, o_ref, acc_ref, *,
+            x_fmt: BlockFormat, w_fmt: BlockFormat):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xt = _decode_tile(xp_ref, xm_ref, x_fmt)                 # (TM, TK) bf16
+    wt = _decode_tile(wp_ref, wm_ref, w_fmt)                 # (TN, TK) bf16
+    acc_ref[...] += jax.lax.dot_general(
+        xt, wt,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("x_fmt", "w_fmt", "tile_m", "tile_n", "tile_k",
+                     "interpret", "out_dtype"))
+def nxfp_qq_matmul_pallas(x_packed, x_meta, w_packed, w_meta,
+                          x_fmt: BlockFormat, w_fmt: BlockFormat,
+                          tile_m: int = 128, tile_n: int = 128,
+                          tile_k: int = 512, interpret: bool = False,
+                          out_dtype=jnp.float32):
+    """Both operands packed; returns (M, N) ``out_dtype``.
+
+    M is padded internally (zero meta rows decode to zeros); K and N must
+    be multiples of the chosen tiles (wrapper in ops.py adapts tile sizes).
+    """
+    assert x_fmt.block_size == w_fmt.block_size, (x_fmt, w_fmt)
+    m, kb, bpb_x = x_packed.shape
+    n, kb_w, bpb_w = w_packed.shape
+    assert kb == kb_w, (x_packed.shape, w_packed.shape)
+    assert bpb_x == x_fmt.bytes_per_block and bpb_w == w_fmt.bytes_per_block
+
+    k_dim = kb * x_fmt.block_size
+    pad_m = (-m) % tile_m
+    if pad_m:
+        x_packed = jnp.pad(x_packed, ((0, pad_m), (0, 0), (0, 0)))
+        x_meta = jnp.pad(x_meta, ((0, pad_m), (0, 0)))
+    assert k_dim % tile_k == 0 and n % tile_n == 0, (k_dim, n, tile_k, tile_n)
+    kb_t = tile_k // x_fmt.block_size
+    # 5/6-bit dequant consumes two-block (64-code) pack tiles: every K tile
+    # must hold an even number of quantization blocks for EACH such operand
+    for f in (x_fmt, w_fmt):
+        assert f.bits in (4, 8) or kb_t % 2 == 0, (f.bits, tile_k)
+
+    grid = ((m + pad_m) // tile_m, n // tile_n, k_dim // tile_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, x_fmt=x_fmt, w_fmt=w_fmt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, kb_t, bpb_x), lambda i, j, k: (i, k, 0)),
+            pl.BlockSpec((tile_m, kb_t), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tile_n, kb_t, bpb_w), lambda i, j, k: (j, k, 0)),
+            pl.BlockSpec((tile_n, kb_t), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pad_m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tile_m, tile_n), jnp.float32)],
+        interpret=interpret,
+    )(x_packed, x_meta.astype(jnp.int32),
+      w_packed, w_meta.astype(jnp.int32))
+    return out[:m]

@@ -92,9 +92,11 @@ def _kernel(x_ref, packed_ref, meta_ref, *, fmt: BlockFormat):
 def nxfp_quantize_pack_pallas(xb, fmt: BlockFormat, tile_rows: int = 256,
                               interpret: bool = False):
     """xb: (T, block_size) f32 blocks -> (packed uint8 (T, bpb), meta
-    uint16 (T,)) — fused Algorithm-1 encode + bit-pack, one HBM write of
-    ``bits/8`` bytes/element. The wrapper in ops.py handles arbitrary
-    shapes/axes.
+    ``fmt.meta_dtype`` (T,)) — fused Algorithm-1 encode + bit-pack, one HBM
+    write of ``bits/8`` bytes/element. Activation-side formats (asym/ox)
+    ride the same body: ``arith_encode_blocks`` branches on the format and
+    the extended meta word (26 bits max) still fits the int32 output. The
+    wrapper in ops.py handles arbitrary shapes/axes.
     """
     t, b = xb.shape
     assert b == fmt.block_size
@@ -121,4 +123,4 @@ def nxfp_quantize_pack_pallas(xb, fmt: BlockFormat, tile_rows: int = 256,
         ],
         interpret=interpret,
     )(xb.astype(jnp.float32))
-    return packed[:t], meta[:t, 0].astype(jnp.uint16)
+    return packed[:t], meta[:t, 0].astype(jnp.dtype(fmt.meta_dtype))

@@ -23,6 +23,7 @@ from repro.core.quantize import (quantize_blocks, quantize_blocks_arith,
 from . import ref as kref
 from .nxfp_attention import nxfp_decode_attention_pallas
 from .nxfp_matmul import nxfp_matmul_pallas
+from .nxfp_qq_matmul import nxfp_qq_matmul_pallas
 from .nxfp_quantize import nxfp_quantize_pack_pallas
 
 __all__ = ["qmatmul", "quantize_qtensor", "decode_attention"]
@@ -83,7 +84,17 @@ def _pick_tile(dim: int, prefs=(512, 256, 128, 64, 32)) -> Optional[int]:
 
 def qmatmul(x, w, impl: Optional[str] = None):
     """x (..., K) @ w, where w is a QTensor (quantized along axis 0 of (K, N))
-    or a plain dense array. Returns (..., N) f32."""
+    or a plain dense array. Returns (..., N) f32.
+
+    ``x`` may itself be a QTensor quantized along axis -1 (an activation
+    tensor from ``quantize_qtensor``): with a quantized ``w`` the GEMM runs
+    quantized x quantized (fused dual-dequant Pallas kernel where eligible,
+    ``qq_matmul_ref`` otherwise); with a dense ``w`` the activation is
+    dequantized once and takes the dense dot (the XLA serving tier keeps
+    recycled dense weights, so only the activation side is quantized —
+    DESIGN.md §15)."""
+    if isinstance(x, QTensor):
+        return _qact_matmul(x, w, impl)
     if not isinstance(w, QTensor):
         return jax.lax.dot_general(
             x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
@@ -122,6 +133,47 @@ def qmatmul(x, w, impl: Optional[str] = None):
                                    interpret=_interpret())
             return y.reshape(*lead, n)
     y = kref.qmatmul_ref(x2, w.packed, w.meta, w.fmt)
+    return y.reshape(*lead, n)
+
+
+def _qact_matmul(xq: QTensor, w, impl: Optional[str]):
+    """Quantized-activation GEMM body (x is a QTensor, axis=-1)."""
+    assert xq.axis == -1, f"activation QTensor must quantize axis -1: {xq.axis}"
+    if not isinstance(w, QTensor):
+        # dense-weight tier: decode the activation once (direct-cast error
+        # already paid at encode) and ride the ordinary bf16 dot.
+        return qmatmul(xq.dequantize(jnp.bfloat16), w, impl)
+    impl = _resolve(impl)
+    x_fmt, w_fmt = xq.fmt, w.fmt
+    assert x_fmt.block_size == w_fmt.block_size, (x_fmt, w_fmt)
+    lead = tuple(xq.shape[:-1])
+    kb = xq.packed.shape[-2]
+    xp = xq.packed.reshape(-1, kb, xq.packed.shape[-1])
+    xm = xq.meta.reshape(-1, kb)
+    assert w.packed.ndim == 3 and w.packed.shape[-2] == kb, (
+        xq.packed.shape, w.packed.shape)
+    n = w.packed.shape[0]
+    k_pad = kb * x_fmt.block_size
+
+    if impl == "pallas" and x_fmt.bits in _KERNEL_BITS \
+            and w_fmt.bits in _KERNEL_BITS \
+            and _tile_ok(x_fmt, kb) and _tile_ok(w_fmt, kb):
+        # K tiles must hold whole two-block pack tiles for EVERY 5/6-bit
+        # operand (the stricter of the two constraints wins)
+        prefs = (512, 256, 128, 64, 32)
+        for f in (x_fmt, w_fmt):
+            if f.bits in (5, 6):
+                two = 2 * f.block_size
+                prefs = tuple(t for t in prefs if t % two == 0)
+        tk = _pick_tile(k_pad, prefs)
+        tn = _pick_tile(n, (256, 128, 64, 32, 16, 8))
+        if tk and tn:
+            tm = _pick_tile(max(xp.shape[0], 1), (256, 128, 64, 32, 16, 8, 1))
+            y = nxfp_qq_matmul_pallas(xp, xm, w.packed, w.meta, x_fmt, w_fmt,
+                                      tile_m=tm or 8, tile_n=tn, tile_k=tk,
+                                      interpret=_interpret())
+            return y.reshape(*lead, n)
+    y = kref.qq_matmul_ref(xp, xm, x_fmt, w.packed, w.meta, w_fmt)
     return y.reshape(*lead, n)
 
 

@@ -8,8 +8,8 @@ from repro.core.formats import BlockFormat
 from repro.core.pack import unpack_codes
 from repro.core.quantize import dequantize_blocks, quantize_blocks
 
-__all__ = ["qmatmul_ref", "quantize_ref", "decode_attention_ref",
-           "dequant_cache_ref"]
+__all__ = ["qmatmul_ref", "qq_matmul_ref", "quantize_ref",
+           "decode_attention_ref", "dequant_cache_ref"]
 
 
 def qmatmul_ref(x, packed, meta, fmt: BlockFormat):
@@ -24,6 +24,29 @@ def qmatmul_ref(x, packed, meta, fmt: BlockFormat):
     w = w.reshape(n, kb * b).astype(jnp.bfloat16)           # (N, K)
     return jax.lax.dot_general(
         x.astype(jnp.bfloat16), w, (((1,), (1,)), ((), ())),
+        preferred_element_type=getattr(_ops, "PSUM_DTYPE", None)
+        or jnp.float32)
+
+
+def qq_matmul_ref(x_packed, x_meta, x_fmt: BlockFormat,
+                  w_packed, w_meta, w_fmt: BlockFormat):
+    """dequant(Xq) @ dequant(Wq) — the numerics oracle for the qq kernel.
+
+    x_packed (M, KB, bpb_x) / w_packed (N, KB, bpb_w), both quantized along
+    the contraction dim (the activation QTensor's axis=-1 layout and the
+    weight QTensor's axis=0 layout coincide after flattening lead dims).
+    """
+    from . import ops as _ops
+    xc = unpack_codes(x_packed, x_fmt.bits, x_fmt.block_size)
+    xd = dequantize_blocks(xc, x_meta, x_fmt, jnp.float32)   # (M, KB, B)
+    m, kb, b = xd.shape
+    xd = xd.reshape(m, kb * b).astype(jnp.bfloat16)          # (M, K)
+    wc = unpack_codes(w_packed, w_fmt.bits, w_fmt.block_size)
+    wd = dequantize_blocks(wc, w_meta, w_fmt, jnp.float32)   # (N, KB, B)
+    n, kbw, bw = wd.shape
+    wd = wd.reshape(n, kbw * bw).astype(jnp.bfloat16)        # (N, K)
+    return jax.lax.dot_general(
+        xd, wd, (((1,), (1,)), ((), ())),
         preferred_element_type=getattr(_ops, "PSUM_DTYPE", None)
         or jnp.float32)
 

@@ -16,7 +16,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .common import ModelConfig, apply_rope, dense, rope_freqs
+from .common import ModelConfig, apply_rope, dense, qact, rope_freqs
 
 _NEG = -1e30
 
@@ -112,21 +112,34 @@ def attend_chunked(q, k, v, *, causal: bool, window: Optional[int] = None,
     return out[:, :tq]
 
 
-def gqa_project(cfg: ModelConfig, p, x, prefix: str = ""):
-    """x (B, T, D) -> q (B,T,KVH,G,hd), k,v (B,T,KVH,hd)."""
+def gqa_project(cfg: ModelConfig, p, x, prefix: str = "", xq=None):
+    """x (B, T, D) -> q (B,T,KVH,G,hd), k,v (B,T,KVH,hd).
+
+    ``xq`` optionally carries a quantized encoding of ``x`` (QTensor,
+    axis=-1): all three projections then run the qq GEMM off ONE encode;
+    ``x`` still supplies the shapes and the output dtype.
+    """
     b, t, _ = x.shape
     hd, h, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
-    q = dense(x, p[f"{prefix}wq"]).reshape(b, t, kvh, h // kvh, hd)
-    k = dense(x, p[f"{prefix}wk"]).reshape(b, t, kvh, hd)
-    v = dense(x, p[f"{prefix}wv"]).reshape(b, t, kvh, hd)
+    src = x if xq is None else xq
+    q = dense(src, p[f"{prefix}wq"], out_dtype=x.dtype
+              ).reshape(b, t, kvh, h // kvh, hd)
+    k = dense(src, p[f"{prefix}wk"], out_dtype=x.dtype).reshape(b, t, kvh, hd)
+    v = dense(src, p[f"{prefix}wv"], out_dtype=x.dtype).reshape(b, t, kvh, hd)
     return q, k, v
 
 
 def self_attention(cfg: ModelConfig, p, x, positions, *, causal=True,
-                   window=None, prefix: str = "", chunk: int = 1024):
-    """Full-sequence self attention (training / prefill). x (B, T, D)."""
+                   window=None, prefix: str = "", chunk: int = 1024,
+                   act_fmt=None):
+    """Full-sequence self attention (training / prefill). x (B, T, D).
+
+    ``act_fmt`` quantizes the layer input once for the three QKV
+    projections and the attention output once for W_o (qq prefill,
+    DESIGN.md §15); None = dense activations, graph unchanged.
+    """
     b, t, d = x.shape
-    q, k, v = gqa_project(cfg, p, x, prefix)
+    q, k, v = gqa_project(cfg, p, x, prefix, xq=qact(x, act_fmt))
     cos, sin = rope_freqs(positions, cfg.hd, cfg.rope_theta)
     q = apply_rope(q.reshape(b, t, -1, cfg.hd), cos, sin).reshape(q.shape)
     k = apply_rope(k, cos, sin)
@@ -139,12 +152,13 @@ def self_attention(cfg: ModelConfig, p, x, positions, *, causal=True,
                        v.astype(x.dtype), causal=causal, window=window,
                        chunk_q=chunk, chunk_kv=chunk)
     o = o.reshape(b, t, cfg.n_heads * cfg.hd).astype(x.dtype)
-    return dense(o, p[f"{prefix}wo"]), k, v
+    return dense(qact(o, act_fmt), p[f"{prefix}wo"], out_dtype=x.dtype), k, v
 
 
 def self_attention_resume(cfg: ModelConfig, p, x, lane_k, lane_v, positions,
                           offset, kv_valid, *, window=None, prefix: str = "",
-                          chunk: int = 1024, wrapped: bool = False):
+                          chunk: int = 1024, wrapped: bool = False,
+                          act_fmt=None):
     """Resumable prefill attention: one (1, P) chunk against the lane.
 
     ``lane_k``/``lane_v`` are a fixed-size dense scratch holding the
@@ -172,11 +186,14 @@ def self_attention_resume(cfg: ModelConfig, p, x, lane_k, lane_v, positions,
     which the unwrapped graph's kv_valid mask already excludes — hence
     a static flag, not a runtime select.
 
+    ``act_fmt`` mirrors ``self_attention``'s: one activation encode feeds
+    the QKV projections, another the W_o projection (qq prefill).
+
     Returns (attn out (1, P, D), k, v (1, P, KVH, hd) rope'd chunk rows
     for the live-cache write, lane_k', lane_v').
     """
     b, t, _ = x.shape
-    q, k, v = gqa_project(cfg, p, x, prefix)
+    q, k, v = gqa_project(cfg, p, x, prefix, xq=qact(x, act_fmt))
     cos, sin = rope_freqs(positions, cfg.hd, cfg.rope_theta)
     q = apply_rope(q.reshape(b, t, -1, cfg.hd), cos, sin).reshape(q.shape)
     k = apply_rope(k, cos, sin)
@@ -206,7 +223,8 @@ def self_attention_resume(cfg: ModelConfig, p, x, lane_k, lane_v, positions,
                        q_offset=q_off, kv_valid=valid,
                        chunk_q=chunk, chunk_kv=chunk)
     o = o.reshape(b, t, cfg.n_heads * cfg.hd).astype(x.dtype)
-    return dense(o, p[f"{prefix}wo"]), k, v, lane_k, lane_v
+    return (dense(qact(o, act_fmt), p[f"{prefix}wo"], out_dtype=x.dtype),
+            k, v, lane_k, lane_v)
 
 
 def cross_attention(cfg: ModelConfig, p, x, mem_k, mem_v, *, prefix="cross_",

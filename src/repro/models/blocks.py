@@ -67,8 +67,16 @@ def init_layer(key, cfg: ModelConfig, kind: str) -> Params:
 
 def layer_forward(cfg: ModelConfig, p: Params, x, positions, kind: str,
                   *, causal: bool = True, mem=None, ssm_state=None,
-                  conv_state=None, chunk: int = 1024):
-    """Returns (x, dict of per-layer outputs for caching/aux)."""
+                  conv_state=None, chunk: int = 1024,
+                  act_fmt: Optional[str] = None):
+    """Returns (x, dict of per-layer outputs for caching/aux).
+
+    ``act_fmt`` quantizes prefill activations for the qq GEMMs in
+    self-attention and the SwiGLU MLP (DESIGN.md §15). Scope: MoE expert
+    GEMMs, mamba and cross-attention stay dense — their GEMMs are either
+    gather-routed (capacity-dependent layouts) or off the long-prompt
+    hot path. None = dense activations, graph unchanged.
+    """
     from repro.sharding.ctx import constrain_act
     x = constrain_act(x)  # keep the residual stream batch-data sharded
     out: Dict[str, Any] = {}
@@ -88,17 +96,19 @@ def layer_forward(cfg: ModelConfig, p: Params, x, positions, kind: str,
     if kind == "hybrid":
         attn_y, kk, vv = self_attention(cfg, p, h, positions, causal=causal,
                                         window=cfg.sliding_window,
-                                        chunk=chunk)
+                                        chunk=chunk, act_fmt=act_fmt)
         ssm_y, hf, conv = mamba_block(cfg, p, h, h0=ssm_state,
                                       conv0=conv_state)
         out.update(k=kk, v=vv, ssm_h=hf, ssm_conv=conv)
         x = x + 0.5 * (attn_y + ssm_y)
         h2 = rmsnorm(x, p["ln2_scale"], cfg.norm_eps)
-        return x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"]), out
+        return x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"],
+                          act_fmt=act_fmt), out
 
     # dense / moe / encdec
     y, kk, vv = self_attention(cfg, p, h, positions, causal=causal,
-                               window=cfg.sliding_window, chunk=chunk)
+                               window=cfg.sliding_window, chunk=chunk,
+                               act_fmt=act_fmt)
     out.update(k=kk, v=vv)
     x = x + y
     if kind == "encdec":
@@ -109,7 +119,8 @@ def layer_forward(cfg: ModelConfig, p: Params, x, positions, kind: str,
         y2, aux = moe_ffn(cfg, p, h2)
         out["moe_aux"] = aux
         return x + y2, out
-    return x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"]), out
+    return x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"],
+                      act_fmt=act_fmt), out
 
 
 # ---------------------------------------------------------------------------
@@ -129,7 +140,8 @@ def _slot_put(buf, val, slot, apply=None):
 def layer_prefill_chunk(cfg: ModelConfig, p: Params, x, lane_l, cache_l,
                         slot, positions, offset, n_valid, kind: str,
                         kv_fmt: Optional[str], first, active=None,
-                        wrapped: bool = False):
+                        wrapped: bool = False,
+                        act_fmt: Optional[str] = None):
     """One layer of the resumable chunked prefill. x (1, P, D).
 
     Mirrors ``layer_forward`` over a single (1, P) chunk of the prompt:
@@ -164,7 +176,7 @@ def layer_prefill_chunk(cfg: ModelConfig, p: Params, x, lane_l, cache_l,
         attn_y, kk, vv, lane_k, lane_v = self_attention_resume(
             cfg, p, h, lane_l["k"], lane_l["v"], positions, offset,
             kv_valid=jnp.asarray(offset + n_valid, jnp.int32).reshape(1),
-            window=cfg.sliding_window, wrapped=wrapped)
+            window=cfg.sliding_window, wrapped=wrapped, act_fmt=act_fmt)
         new_lane.update(k=lane_k, v=lane_v)
         attn_entries = {n: cache_l[n] for n in cache_l
                         if not n.startswith(("h", "conv"))}
@@ -202,7 +214,8 @@ def layer_prefill_chunk(cfg: ModelConfig, p: Params, x, lane_l, cache_l,
         y2, _ = moe_ffn(cfg, p, h2,
                         valid=jnp.arange(h2.shape[1]) < n_valid)
         return x + y2, new_lane, new_cache
-    return (x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"]),
+    return (x + swiglu(h2, p["mlp_w1"], p["mlp_w3"], p["mlp_w2"],
+                       act_fmt=act_fmt),
             new_lane, new_cache)
 
 

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.qtensor import QTensor
-from repro.kernels.ops import qmatmul
+from repro.kernels.ops import qmatmul, quantize_qtensor
 
 Params = Dict[str, Any]
 
@@ -169,9 +169,29 @@ def rmsnorm(x, scale, eps: float):
 
 
 def dense(x, w, out_dtype=None):
-    """Matmul against a dense or quantized (QTensor, axis=-2) weight."""
+    """Matmul against a dense or quantized (QTensor, axis=-2) weight.
+
+    ``x`` may be a quantized activation (QTensor, axis=-1) — the
+    quantized x quantized prefill path (DESIGN.md §15). Callers passing a
+    QTensor ``x`` must give an explicit ``out_dtype`` (a QTensor has no
+    meaningful compute dtype of its own).
+    """
+    if isinstance(x, QTensor):
+        assert out_dtype is not None, "QTensor activations need out_dtype"
     y = qmatmul(x, w)
     return y.astype(out_dtype or x.dtype)
+
+
+def qact(x, act_fmt: Optional[str]):
+    """Quantize an activation along its feature axis for the qq GEMM.
+
+    ``act_fmt=None`` is the identity (dense activations) — the act_fmt
+    plumbing threads through every prefill layer, and None keeps the graph
+    byte-for-byte what it was before DESIGN.md §15.
+    """
+    if act_fmt is None:
+        return x
+    return quantize_qtensor(x, act_fmt, axis=-1)
 
 
 def rope_freqs(positions, head_dim: int, theta: float):
@@ -191,11 +211,18 @@ def apply_rope(x, cos, sin):
     return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
 
 
-def swiglu(x, w1, w3, w2):
-    """SwiGLU MLP: (x W1 . silu) * (x W3) W2."""
-    h = jax.nn.silu(dense(x, w1).astype(jnp.float32)) * dense(x, w3).astype(
-        jnp.float32)
-    return dense(h.astype(x.dtype), w2)
+def swiglu(x, w1, w3, w2, act_fmt: Optional[str] = None):
+    """SwiGLU MLP: (x W1 . silu) * (x W3) W2.
+
+    ``act_fmt`` quantizes both GEMM inputs (the layer input feeds W1 and
+    W3 from ONE encode; the gated hidden is encoded once before W2) for
+    the quantized x quantized prefill path. None = dense activations,
+    graph unchanged.
+    """
+    xq = qact(x, act_fmt)
+    h = jax.nn.silu(dense(xq, w1, out_dtype=x.dtype).astype(jnp.float32)) \
+        * dense(xq, w3, out_dtype=x.dtype).astype(jnp.float32)
+    return dense(qact(h.astype(x.dtype), act_fmt), w2, out_dtype=x.dtype)
 
 
 def init_mlp(key, d: int, ff: int, n_layers: int):

@@ -168,9 +168,14 @@ def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
 # ---------------------------------------------------------------------------
 
 def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
-            max_len: int, kv_fmt: Optional[str]
+            max_len: int, kv_fmt: Optional[str], act_fmt: Optional[str] = None
             ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """Run the full prompt, build the cache. Returns (last logits (B,V), cache)."""
+    """Run the full prompt, build the cache. Returns (last logits (B,V), cache).
+
+    ``act_fmt`` (DESIGN.md §15) quantizes each layer's prefill activations
+    for quantized x quantized GEMMs — scanned-stack families only (vlm/
+    audio group scans stay dense); None keeps the seed graph bitwise.
+    """
     tokens = batch["tokens"]
     b, t = tokens.shape
     x = _embed(cfg, params, tokens)
@@ -187,7 +192,8 @@ def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
         kind = _KIND[fam]
 
         def body(h, lp):
-            h, out = layer_forward(cfg, lp, h, positions, kind)
+            h, out = layer_forward(cfg, lp, h, positions, kind,
+                                   act_fmt=act_fmt)
             entries = {}
             if "k" in out:
                 entries.update(attn_entries(out))
@@ -288,7 +294,7 @@ def init_lane(cfg: ModelConfig, max_len: int, p_chunk: int,
 def prefill_chunk(cfg: ModelConfig, params: Params, tokens, cache, slot,
                   offset, n_valid, lane, kv_fmt: Optional[str],
                   with_head: bool = True, active=None,
-                  wrapped: bool = False):
+                  wrapped: bool = False, act_fmt: Optional[str] = None):
     """Advance the in-flight prefill by ONE fixed-shape (1, P) chunk.
 
     ``tokens`` holds prompt positions [offset, offset + P) (tail-padded
@@ -322,6 +328,10 @@ def prefill_chunk(cfg: ModelConfig, params: Params, tokens, cache, slot,
     must be False for in-capacity chunks: the two graphs index the lane
     differently and only agree on their own offset ranges.
 
+    ``act_fmt`` (STATIC, DESIGN.md §15) quantizes the chunk's per-layer
+    activations for quantized x quantized GEMMs; None keeps the graph
+    byte-identical to the dense-activation lane.
+
     Returns (logits (1, V) — or hidden (1, D) — , new_cache, new_lane).
     """
     b, pch = tokens.shape
@@ -338,7 +348,8 @@ def prefill_chunk(cfg: ModelConfig, params: Params, tokens, cache, slot,
         lp, lane_l, cache_l = xs
         h, new_lane_l, new_cache_l = layer_prefill_chunk(
             cfg, lp, h, lane_l, cache_l, slot, positions, offset, n_valid,
-            kind, kv_fmt, first, active=active, wrapped=wrapped)
+            kind, kv_fmt, first, active=active, wrapped=wrapped,
+            act_fmt=act_fmt)
         return h, (new_lane_l, new_cache_l)
 
     x, (new_lane, new_layers) = jax.lax.scan(
@@ -824,7 +835,8 @@ def read_cache_slot(cache: Dict[str, Any], slot):
 
 def prefill_into_slot(cfg: ModelConfig, params: Params,
                       batch: Dict[str, Any], cache: Dict[str, Any], slot,
-                      max_len: int, kv_fmt: Optional[str], apply=None):
+                      max_len: int, kv_fmt: Optional[str], apply=None,
+                      act_fmt: Optional[str] = None):
     """Prefill ONE request (batch-1 inputs) into slot ``slot`` of a live cache.
 
     The prompt runs through the ordinary batch-1 ``prefill`` (so its K/V
@@ -832,10 +844,13 @@ def prefill_into_slot(cfg: ModelConfig, params: Params,
     scattered into the slot. Returns (last logits (1, V), new cache).
     ``apply`` (traced bool) gates the scatter only — the sharded engine
     runs this under a per-shard cond (owner-only admission) and lets the
-    slot's owner alone commit the merge.
+    slot's owner alone commit the merge.  ``act_fmt`` (static) threads
+    the quantized-activation prefill format (DESIGN.md §15); None keeps
+    the graph byte-identical to the pre-tier engine.
     """
     assert batch["tokens"].shape[0] == 1, batch["tokens"].shape
-    logits, solo = prefill(cfg, params, batch, max_len, kv_fmt)
+    logits, solo = prefill(cfg, params, batch, max_len, kv_fmt,
+                           act_fmt=act_fmt)
     return logits, write_cache_slot(cache, solo, slot, apply=apply)
 
 

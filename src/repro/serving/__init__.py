@@ -12,6 +12,8 @@ from .paged_engine import PagedContinuousEngine, ShardedPagedContinuousEngine
 from .sharded import ShardedContinuousEngine
 from .snapshot import SlotSnapshot, load_checkpoint, save_checkpoint
 from .speculative import SpeculativeConfig
+from .tiers import (TieredContinuousEngine, TierSpec, default_tiers,
+                    kv_row_bytes, repack_kv)
 
 __all__ = ["ServeEngine", "GenerationResult", "ContinuousEngine",
            "PagedContinuousEngine", "ShardedPagedContinuousEngine",
@@ -24,4 +26,5 @@ __all__ = ["ServeEngine", "GenerationResult", "ContinuousEngine",
            "Fault", "FaultPlan", "SpeculativeConfig", "SlotSnapshot",
            "save_checkpoint",
            "load_checkpoint", "Journal", "replay", "EVENT_KINDS",
-           "emit", "parse_event"]
+           "emit", "parse_event", "TieredContinuousEngine", "TierSpec",
+           "default_tiers", "kv_row_bytes", "repack_kv"]

@@ -31,11 +31,13 @@ __all__ = ["emit", "parse_event", "Journal", "replay", "EVENT_KINDS"]
 # are the paged-KV observability records (DESIGN.md §14): page-pool
 # occupancy + high watermark at every allocation/release edge, shared-
 # page copy-on-write breaks, and shared-prefix admission hits.
+# ``kv-repack`` is the tiered engine's degraded-KV rung (DESIGN.md §15):
+# a resident slot's cache re-quantized into the cheap tier's arena.
 EVENT_KINDS = ("admit", "prefill-start", "prefill-done", "degrade",
                "shed", "expire", "cancel", "fault", "quarantine",
                "requeue", "finish", "suspend", "resume", "preempt",
                "migrate", "drain", "checkpoint", "restore", "spec-k",
-               "pool", "cow-break", "prefix-hit")
+               "pool", "cow-break", "prefix-hit", "kv-repack")
 
 
 def emit(logger, event: str, **fields) -> None:

@@ -116,6 +116,9 @@ class Request:
     ``PreemptionPolicy`` a waiting high-priority request may suspend the
     lowest-priority decoding slot and take its place — the suspended
     request resumes later bit-identically from its slot snapshot.
+    ``tier`` names a per-slot serving tier (weights x KV x prefill-act
+    formats, DESIGN.md §15) on a ``TieredContinuousEngine``; None takes
+    the engine's default tier, and non-tiered engines ignore it.
     """
     uid: int
     tokens: np.ndarray                  # (T,) int32 prompt
@@ -127,6 +130,7 @@ class Request:
     deadline_s: Optional[float] = None
     retries: int = 0
     priority: int = 0
+    tier: Optional[str] = None
 
 
 @dataclasses.dataclass

@@ -111,10 +111,6 @@ class ShardedContinuousEngine(ContinuousEngine):
         self._drained: set = set()
         self._drain_req: set = set()
         super().__init__(cfg, params, policy, n_slots=n_slots, **kw)
-        # the fused S-lane dispatch doesn't thread the ring-wrap graph
-        # (one static trace serves all shards); long-SWA chunked
-        # admission past the lane scratch stays an unsharded feature
-        self._lane_ring = False
 
     # -- placement ----------------------------------------------------------
 
@@ -312,22 +308,36 @@ class ShardedContinuousEngine(ContinuousEngine):
         self.lane = jax.device_put(lane, jax.tree.map(
             lambda _: NamedSharding(mesh, lspec), lane))
 
+        ring = self._lane_ring
+
         def lane_body(params, toks, cache, lane, slot, offset, n_valid,
-                      active, *, with_head: bool):
+                      active, wrapped, *, with_head: bool):
             # local view: ONE shard's lane advancing its own in-flight
             # prompt by one (1, P) chunk — idle shards run the same
             # program as a no-op (n_valid=0 drops every scatter row,
-            # active=False gates the SSM slot writes)
-            out, new_cache, new_lane = prefill_chunk(
-                cfg, params, toks, cache, slot[0], offset[0], n_valid[0],
-                lane, kv, with_head=with_head, active=active[0])
-            return out, new_cache, new_lane
+            # active=False gates the SSM slot writes).  ``wrapped`` is
+            # PER SHARD: the unsharded engine picks the ring-lane graph
+            # statically (one cursor, one flag), but the fused dispatch
+            # advances S lanes whose prompts lap the scratch at different
+            # chunks — so on ring-capable geometries (``_lane_ring``)
+            # each shard selects its graph with a cond on its own flag.
+            # Non-ring engines keep the single plain trace.
+            def run(w: bool):
+                return prefill_chunk(
+                    cfg, params, toks, cache, slot[0], offset[0],
+                    n_valid[0], lane, kv, with_head=with_head,
+                    active=active[0], wrapped=w)
+
+            if not ring:
+                return run(False)
+            return jax.lax.cond(wrapped[0], lambda: run(True),
+                                lambda: run(False))
 
         def build_lane_fn():
             memo: Dict[bool, Any] = {}
 
             def lane_fn(params, toks, cache, lane, slot, offset, n_valid,
-                        active, *, with_head: bool):
+                        active, wrapped, *, with_head: bool):
                 fn = memo.get(with_head)
                 if fn is None:
                     body = functools.partial(lane_body,
@@ -335,14 +345,17 @@ class ShardedContinuousEngine(ContinuousEngine):
                     fn = memo[with_head] = jax.jit(shard_map_manual(
                         body, mesh,
                         in_specs=(_R, _Pd, cspec, lspec, _Pd, _Pd, _Pd,
-                                  _Pd),
+                                  _Pd, _Pd),
                         out_specs=(_Pd, cspec, lspec)))
                 return fn(params, toks, cache, lane, slot, offset,
-                          n_valid, active)
+                          n_valid, active, wrapped)
 
             return lane_fn
 
-        self._lane_fn = cached_program(("lane", cfg, kv, pch, mk),
+        # ``ring`` rides the key: the cond-over-graphs trace differs from
+        # the plain one, and ring-ness depends on max_len (via the lane
+        # row count), which no other key component carries
+        self._lane_fn = cached_program(("lane", cfg, kv, pch, mk, ring),
                                        build_lane_fn)
         nloc = self.slots_per_shard
 
@@ -559,6 +572,7 @@ class ShardedContinuousEngine(ContinuousEngine):
         offs = np.zeros((s_n,), np.int32)
         nval = np.zeros((s_n,), np.int32)
         act = np.zeros((s_n,), bool)
+        wrap = np.zeros((s_n,), bool)
         finals: Dict[int, int] = {}
         for shard, pf in self._pf.items():
             req, off = pf["req"], pf["offset"]
@@ -569,12 +583,13 @@ class ShardedContinuousEngine(ContinuousEngine):
             offs[shard] = off
             nval[shard] = nv
             act[shard] = True
+            wrap[shard] = off >= self._lane_rows
             if off + nv >= t:
                 finals[shard] = t
         out, self.cache, self.lane = self._lane_fn(
             self.params, toks, self.cache, self.lane, jnp.asarray(lslot),
             jnp.asarray(offs), jnp.asarray(nval), jnp.asarray(act),
-            with_head=bool(finals))
+            jnp.asarray(wrap), with_head=bool(finals))
         for shard, pf in self._pf.items():
             if act[shard]:
                 pf["offset"] += int(nval[shard])

@@ -1,0 +1,129 @@
+"""Property tests (hypothesis) for the ACTIVATION-side codecs: asymmetric
+dual-scale (AMXFP-style) and block-max-outlier (MX+-style) block formats
+feeding the §15 quantized x quantized prefill."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dequantize_blocks, get_format, quantize_blocks
+from repro.kernels import quantize_qtensor
+
+ACT_FMTS = ["amxfp4", "amxfp4_nm", "amxfp4_ox", "mxfp4_ox"]
+
+# direct-cast domain as in test_quantize_props: normal f32 magnitudes
+_BOUND = float(np.float32(1e20))
+finite = st.floats(min_value=-_BOUND, max_value=_BOUND, allow_nan=False,
+                   allow_infinity=False, allow_subnormal=False, width=32)
+
+
+@st.composite
+def block_arrays(draw, nblocks=4):
+    data = draw(st.lists(finite, min_size=nblocks * 32,
+                         max_size=nblocks * 32))
+    x = np.array(data, np.float32).reshape(nblocks, 32)
+    return np.where(np.abs(x) < 1e-30, 0.0, x)
+
+
+def _roundtrip(xb, fname):
+    fmt = get_format(fname)
+    c, m = quantize_blocks(jnp.asarray(xb), fmt)
+    return np.asarray(dequantize_blocks(c, m, fmt))
+
+
+@given(block_arrays(), st.sampled_from(ACT_FMTS))
+@settings(max_examples=60, deadline=None)
+def test_act_roundtrip_bounded_by_blockmax(xb, fname):
+    """Decode(encode(x)) stays within a quarter of the block max per
+    element — the 4-bit direct-cast bound.  Relative error is the wrong
+    metric here (values below the grid floor snap to zero, which is
+    100% relative error by design); err/blockmax is what the serving
+    error budget composes from."""
+    d = _roundtrip(xb, fname)
+    assert np.all(np.isfinite(d))
+    bm = np.abs(xb).max(-1, keepdims=True)
+    bound = 0.2501 * np.maximum(bm, 1e-30)
+    assert np.all(np.abs(d - xb) < bound + 1e-30)
+
+
+@given(block_arrays(), st.sampled_from(ACT_FMTS))
+@settings(max_examples=30, deadline=None)
+def test_act_zero_blocks_decode_to_zero(xb, fname):
+    """All-zero blocks (padding rows in the lane, -0.0 included) decode
+    to EXACT zeros — the property that makes zero-padded packed rows free
+    in the qq GEMM (and keeps the ox substitution gate off)."""
+    z = np.zeros_like(xb)
+    z[0, :] = -0.0
+    d = _roundtrip(z, fname)
+    np.testing.assert_array_equal(d, np.zeros_like(z))
+
+
+@given(block_arrays())
+@settings(max_examples=30, deadline=None)
+def test_asym_decodes_skewed_signs_tighter(xb):
+    """The AMXFP claim: with a separate exponent per sign, the small-
+    magnitude sign's elements get their own scale instead of flushing
+    against the large sign's.  Construct the skew explicitly: positives
+    O(block max), negatives 100x smaller — the asymmetric codec's
+    negative-side error must not exceed the symmetric codec's."""
+    x = np.abs(xb) + 1e-20
+    skew = np.concatenate([x[:, :16], -x[:, 16:] / 100.0], axis=1)
+    d_sym = _roundtrip(skew, "mxfp4")
+    d_asym = _roundtrip(skew, "amxfp4")
+    neg = skew < 0
+    err_sym = np.abs((d_sym - skew) * neg).max()
+    err_asym = np.abs((d_asym - skew) * neg).max()
+    assert err_asym <= err_sym + 1e-30
+
+
+@given(block_arrays())
+@settings(max_examples=30, deadline=None)
+def test_ox_tracks_block_max_outlier(xb):
+    """The MX+ claim: the recycled-code block-max index gives the block
+    max an extra mantissa bit, so the outlier element's reconstruction
+    error can only improve (or tie) over the plain format."""
+    x = xb.copy()
+    x[:, 0] = np.abs(x).max(-1) * 7.4 + 1.0        # loud, unique block max
+    for plain, ox in [("mxfp4", "mxfp4_ox"), ("amxfp4", "amxfp4_ox")]:
+        dp = _roundtrip(x, plain)
+        do = _roundtrip(x, ox)
+        err_p = np.abs(dp[:, 0] - x[:, 0])
+        err_o = np.abs(do[:, 0] - x[:, 0])
+        assert np.all(err_o <= err_p + 1e-6 * np.abs(x[:, 0])), (plain, ox)
+
+
+@given(block_arrays(), st.sampled_from(ACT_FMTS))
+@settings(max_examples=20, deadline=None)
+def test_act_second_pass_stable(xb, fname):
+    """quantize∘dequantize stabilizes by the second application (same
+    orbit property the symmetric suite pins down) — serving re-encodes
+    activations every layer, so drift would compound."""
+    d1 = _roundtrip(xb, fname)
+    d2 = _roundtrip(d1, fname)
+    d3 = _roundtrip(d2, fname)
+    np.testing.assert_allclose(d3, d2, rtol=1e-6, atol=1e-30)
+
+
+def test_meta_dtype_split():
+    """Asymmetric formats carry a 26-bit meta word (uint32); every
+    symmetric format — ox included — keeps the uint16 seed word the KV
+    cache buffers are allocated with."""
+    assert get_format("amxfp4").meta_dtype == "uint32"
+    assert get_format("amxfp4_ox").meta_dtype == "uint32"
+    assert get_format("mxfp4_ox").meta_dtype == "uint16"
+    assert get_format("nxfp4").meta_dtype == "uint16"
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, 64)).astype(np.float32))
+    assert quantize_qtensor(x, "amxfp4", axis=-1).meta.dtype == jnp.uint32
+    assert quantize_qtensor(x, "mxfp4_ox", axis=-1).meta.dtype == jnp.uint16
+
+
+def test_act_qtensor_roundtrip_shape_and_bound(rng):
+    """quantize_qtensor(axis=-1) on a ragged-length activation matrix:
+    shape round-trips through orig_len, values hold the blockmax bound."""
+    x = rng.standard_normal((5, 3, 100)).astype(np.float32)
+    for fname in ACT_FMTS:
+        qt = quantize_qtensor(jnp.asarray(x), fname, axis=-1)
+        d = np.asarray(qt.dequantize(jnp.float32))
+        assert d.shape == x.shape
+        bm = np.abs(x).max(-1, keepdims=True) + 1e-30
+        assert float((np.abs(d - x) / bm).max()) <= 0.2501, fname

@@ -1,0 +1,101 @@
+"""Quantized x quantized GEMM: the fused dual-dequant Pallas kernel vs the
+pure-jnp oracle (interpret mode), and the ``ops.qmatmul`` dispatch rules
+for QTensor activations (DESIGN.md §15)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QTensor, get_format
+from repro.kernels import qmatmul, quantize_qtensor
+from repro.kernels.nxfp_qq_matmul import nxfp_qq_matmul_pallas
+from repro.kernels.ref import qq_matmul_ref
+
+# (activation fmt, weight fmt): the serving tiers' pairs plus width mixes
+PAIRS = [("amxfp4", "nxfp4"), ("amxfp4_ox", "nxfp4"), ("mxfp4_ox", "nxfp4"),
+         ("amxfp4", "nxfp6"), ("amxfp4_nm", "nxfp8"), ("mxfp4", "mxfp4")]
+
+
+def _quantize_pair(rng, m, k, n, xf, wf):
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = (rng.standard_normal((k, n)) * 0.05).astype(np.float32)
+    xq = quantize_qtensor(jnp.asarray(x), xf, axis=-1)
+    wq = QTensor.quantize(jnp.asarray(w), get_format(wf), axis=0)
+    return x, w, xq, wq
+
+
+@pytest.mark.parametrize("xf,wf", PAIRS)
+@pytest.mark.parametrize("mkn", [(32, 256, 128), (17, 128, 64)])
+def test_qq_kernel_matches_ref_bitwise(rng, xf, wf, mkn):
+    """Interpret-mode kernel == qq_matmul_ref EXACTLY: both sides decode
+    arithmetically to bf16 operands and accumulate f32 on the same
+    contraction order, so the comparison is bit-equality, not a
+    tolerance."""
+    m, k, n = mkn
+    _, _, xq, wq = _quantize_pair(rng, m, k, n, xf, wf)
+    ref = qq_matmul_ref(xq.packed, xq.meta, xq.fmt,
+                        wq.packed, wq.meta, wq.fmt)
+    y = nxfp_qq_matmul_pallas(xq.packed, xq.meta, wq.packed, wq.meta,
+                              xq.fmt, wq.fmt, tile_m=32, tile_n=64,
+                              tile_k=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref))
+
+
+@pytest.mark.parametrize("xf,wf", PAIRS[:3])
+def test_qq_close_to_dense_product(rng, xf, wf):
+    """The qq product tracks the full-precision x @ w within the composed
+    direct-cast budget (both operands' blockmax bounds)."""
+    x, w, xq, wq = _quantize_pair(rng, 32, 256, 128, xf, wf)
+    y = np.asarray(qq_matmul_ref(xq.packed, xq.meta, xq.fmt,
+                                 wq.packed, wq.meta, wq.fmt))
+    ref = x @ w
+    scale = np.abs(ref).max() + 1e-9
+    assert float(np.abs(y - ref).max() / scale) < 0.35
+
+
+def test_qmatmul_dispatch_qtensor_activation(rng):
+    """``qmatmul`` with a QTensor activation: quantized weight routes to
+    the qq path (pallas-interpret == xla == oracle); dense weight decodes
+    the activation once and rides the ordinary dot."""
+    x, w, xq, wq = _quantize_pair(rng, 16, 128, 64, "amxfp4", "nxfp4")
+    oracle = np.asarray(qq_matmul_ref(xq.packed, xq.meta, xq.fmt,
+                                      wq.packed, wq.meta, wq.fmt))
+    for impl in ("xla", "pallas"):
+        got = np.asarray(qmatmul(xq, wq, impl=impl))
+        np.testing.assert_allclose(got, oracle, rtol=1e-5, atol=1e-5,
+                                   err_msg=impl)
+    dense = np.asarray(qmatmul(xq, jnp.asarray(w)))
+    via_dequant = np.asarray(qmatmul(xq.dequantize(jnp.bfloat16),
+                                     jnp.asarray(w)))
+    np.testing.assert_array_equal(dense, via_dequant)
+
+
+def test_qmatmul_qq_leading_dims_and_ragged_k(rng):
+    """(B, T, K) activations flatten through the qq path, and a K that is
+    not a tile multiple (odd block count for a 5/6-bit operand) falls
+    back to the XLA reference rather than mis-tiling."""
+    x = rng.standard_normal((2, 5, 96)).astype(np.float32)   # 3 blocks: odd
+    w = (rng.standard_normal((96, 64)) * 0.05).astype(np.float32)
+    xq = quantize_qtensor(jnp.asarray(x), "amxfp4", axis=-1)
+    wq = QTensor.quantize(jnp.asarray(w), get_format("nxfp6"), axis=0)
+    got = np.asarray(qmatmul(xq, wq, impl="pallas"))   # 5/6-bit odd: XLA
+    assert got.shape == (2, 5, 64)
+    oracle = np.asarray(qq_matmul_ref(
+        xq.packed.reshape(10, 3, -1), xq.meta.reshape(10, 3),
+        xq.fmt, wq.packed, wq.meta, wq.fmt)).reshape(2, 5, 64)
+    np.testing.assert_allclose(got, oracle, rtol=1e-5, atol=1e-5)
+
+
+def test_qq_zero_padded_rows_decode_free(rng):
+    """Zero packed rows (lane padding) contribute exact zeros to the
+    product — meta word 0 keeps every decode gate (ox included) off."""
+    _, _, xq, wq = _quantize_pair(rng, 8, 128, 64, "amxfp4_ox", "nxfp4")
+    xp = jnp.concatenate([xq.packed, jnp.zeros_like(xq.packed)], axis=0)
+    xm = jnp.concatenate([xq.meta, jnp.zeros_like(xq.meta)], axis=0)
+    y = np.asarray(nxfp_qq_matmul_pallas(xp, xm, wq.packed, wq.meta,
+                                         xq.fmt, wq.fmt, tile_m=8,
+                                         tile_n=64, tile_k=128,
+                                         interpret=True))
+    assert np.all(y[8:] == 0.0)
+    ref = np.asarray(qq_matmul_ref(xq.packed, xq.meta, xq.fmt,
+                                   wq.packed, wq.meta, wq.fmt))
+    np.testing.assert_array_equal(y[:8], ref)

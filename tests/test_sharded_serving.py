@@ -224,6 +224,11 @@ check("llama3_8b", "nxfp4", "chunked", 8, 2,
 # SWA: a prompt that wraps the ring while neighbors churn
 check("h2o_danube_3_4b", "nxfp4", "chunked", 16, 2,
       [8, 40, 8, 16], [40, 6, 6, 6])
+# SWA ring-WRAP prefill: an 80-token prompt overruns the 64-row lane
+# scratch mid-prefill (offset >= lane_rows), exercising the per-shard
+# ``wrapped`` lane branch that used to be an unsharded-only path
+check("h2o_danube_3_4b", "nxfp4", "chunked", 16, 2,
+      [8, 80, 8, 16], [6, 6, 6, 6])
 # hybrid (SWA ring + SSM carry), whole-prompt admission owner-masked
 check("hymba_1_5b", "nxfp4", "whole", None, 2, [8, 24, 17, 8],
       [5, 11, 3, 8])
